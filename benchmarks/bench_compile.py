@@ -1,0 +1,39 @@
+"""Benchmark 2 (paper §3): compiler cost — partition / Z3-map / lower
+(ISL ``S`` + codegen) breakdown vs network depth and chip size."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import build_resnet_block_chain, make_chip
+from repro.core.lowering import lower
+from repro.core.mapping import map_partitions
+from repro.core.partition import partition_graph
+
+
+def run() -> list:
+    rows = []
+    for blocks in (2, 4, 8):
+        graph = build_resnet_block_chain(blocks)
+        n_cores = 2 * blocks + 4
+        chip = make_chip(n_cores, "banded")
+
+        t0 = time.perf_counter()
+        pg = partition_graph(graph)
+        t1 = time.perf_counter()
+        mapping = map_partitions(pg, chip)
+        t2 = time.perf_counter()
+        prog = lower(pg, mapping)
+        t3 = time.perf_counter()
+
+        n_automata = sum(len(c.lcu) for c in prog.cores.values())
+        rows.append({
+            "bench": "compile", "case": f"resnet{blocks}/{n_cores}c",
+            "partitions": len(pg.partitions),
+            "lcu_automata": n_automata,
+            "partition_ms": round((t1 - t0) * 1e3, 2),
+            "z3_map_ms": round((t2 - t1) * 1e3, 2),
+            "lower_isl_ms": round((t3 - t2) * 1e3, 2),
+            "total_ms": round((t3 - t0) * 1e3, 2),
+        })
+    return rows

@@ -1,0 +1,67 @@
+"""Gradient-compression benchmark: wire bytes vs convergence penalty.
+
+Scale story (EXPERIMENTS.md §Perf / DESIGN.md §scale): the inter-pod hop
+is the slow wire at 1000+ nodes.  This benchmark quantifies, on a convex
+proxy problem, the wire-byte reduction of each CompressionSpec against the
+extra iterations error feedback needs to reach a fixed loss — the
+trade-off a fleet operator actually tunes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.distributed import (CompressionSpec, compress_with_feedback,
+                               init_error_feedback)
+
+
+def _steps_to_converge(spec: CompressionSpec, dim: int = 512,
+                       tol: float = 1e-2, lr: float = 0.2,
+                       max_steps: int = 2000, seed: int = 0) -> int:
+    rng = np.random.default_rng(seed)
+    # quadratic with mild anisotropy: f(x) = 0.5 x^T D x
+    d = jnp.asarray(np.linspace(0.5, 1.5, dim), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(dim) * 3, jnp.float32)
+    ef = init_error_feedback({"x": x})
+    for t in range(max_steps):
+        g = {"x": d * x}
+        c, ef = compress_with_feedback(g, ef, spec)
+        x = x - lr * c["x"]
+        if float(jnp.linalg.norm(x)) < tol:
+            return t + 1
+    return max_steps
+
+
+def run():
+    dim = 512
+    specs = {
+        "none": CompressionSpec(kind="none"),
+        "int8/b256": CompressionSpec(kind="int8", block=256),
+        "int8/b64": CompressionSpec(kind="int8", block=64),
+        "topk/10%": CompressionSpec(kind="topk", topk_frac=0.10),
+        "topk/1%": CompressionSpec(kind="topk", topk_frac=0.01),
+    }
+    base_bytes = 4 * dim
+    base_steps = None
+    rows = []
+    for name, spec in specs.items():
+        steps = _steps_to_converge(spec, dim)
+        if base_steps is None:
+            base_steps = steps
+        wire = spec.wire_bytes(dim)
+        rows.append({
+            "bench": "compression", "spec": name,
+            "wire_bytes_per_step": wire,
+            "compression": f"{base_bytes / wire:.1f}x",
+            "steps_to_tol": steps,
+            "step_overhead": f"{steps / base_steps:.2f}x",
+            "net_wire_saving": f"{base_bytes * base_steps / (wire * steps):.1f}x",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,41 @@
+"""Benchmark 1 (paper §1/§2 motivation): pipelined vs layer-at-a-time.
+
+The paper's entire premise is that crossbar reprogramming is so expensive
+that the NN must be resident and *pipelined*; this benchmark quantifies the
+cycle-count and utilization gap on the simulator for the Fig.2 pattern.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (Simulator, build_lenet_like,
+                        build_resnet_block_chain, compile_model, make_chip)
+
+
+def run() -> list:
+    rows = []
+    cases = [
+        ("lenet", build_lenet_like(), 8, (1, 12, 12)),
+        ("resnet2", build_resnet_block_chain(2), 8, (4, 8, 8)),
+        ("resnet4", build_resnet_block_chain(4), 12, (4, 8, 8)),
+    ]
+    rng = np.random.default_rng(0)
+    for name, graph, cores, shp in cases:
+        chip = make_chip(cores, "banded")
+        prog = compile_model(graph, chip)
+        for n_images in (1, 4, 8):
+            images = [rng.normal(size=shp).astype(np.float32)
+                      for _ in range(n_images)]
+            sim = Simulator(prog, chip, check_raw=False)
+            _, pipe = sim.run(images, schedule="pipelined")
+            _, seq = sim.run(images, schedule="sequential")
+            rows.append({
+                "bench": "pipeline", "case": f"{name}/n={n_images}",
+                "pipelined_cycles": pipe.cycles,
+                "sequential_cycles": seq.cycles,
+                "speedup": round(seq.cycles / pipe.cycles, 2),
+                "pipe_util": round(pipe.mean_utilization(), 3),
+                "seq_util": round(seq.mean_utilization(), 3),
+            })
+    return rows

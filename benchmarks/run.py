@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper-table/claim, CSV-ish output.
+
+  bench_pipeline — pipelined vs layer-at-a-time (paper §1/§2 motivation)
+  bench_compile  — compiler phase costs vs depth (paper §3)
+  bench_lcu      — generated-code vs table LCU (paper §3.4/§3.5)
+  bench_kernels  — Pallas kernels vs jnp oracles
+  bench_train    — end-to-end host train/serve sanity
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only pipeline,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_compile, bench_compression, bench_kernels,
+                   bench_lcu, bench_pipeline, bench_serve, bench_train)
+    modules = {
+        "pipeline": bench_pipeline, "compile": bench_compile,
+        "lcu": bench_lcu, "kernels": bench_kernels, "train": bench_train,
+        "serve": bench_serve, "compression": bench_compression,
+    }
+    if args.only:
+        modules = {k: v for k, v in modules.items()
+                   if k in args.only.split(",")}
+
+    failures = 0
+    for name, mod in modules.items():
+        print(f"=== {name} ===", flush=True)
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness running
+            print(f"  FAILED: {e!r}")
+            failures += 1
+            continue
+        for row in rows:
+            kv = ",".join(f"{k}={v}" for k, v in row.items()
+                          if k not in ("bench",))
+            print(f"  {kv}")
+    print(f"benchmarks done ({failures} failures)")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Batched serving example: prefill a batch of prompts through a reduced
+qwen2-7b config, then stream tokens with the jit'd decode step — the
+"configure once, stream inputs" economics of the CM accelerator (paper §1)
+applied to LM serving.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = smoke_config("qwen2-7b")
+    engine = ServeEngine(cfg, max_len=96)
+    rng = np.random.default_rng(0)
+
+    batch, prompt_len, gen = 4, 32, 24
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (batch, prompt_len)).astype(np.int32)
+    out = engine.generate(prompts, gen)
+    print(f"generated {out.shape} tokens:")
+    for i, row in enumerate(out):
+        print(f"  seq{i}: {row[:12].tolist()} ...")
+    assert out.shape == (batch, gen)
+
+    stats = engine.throughput_probe(batch, prompt_len, 8)
+    print(f"prefill: {stats['prefill_s']*1e3:.1f} ms | "
+          f"decode: {stats['decode_tok_per_s']:.1f} tok/s (host CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver (deliverable b): train a ~100M-param llama-style model
+for a few hundred steps with the full production stack — synthetic data
+pipeline, AdamW + cosine schedule, async checkpointing, watchdog — and
+verify the loss decreases.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import tempfile
+import time
+
+from repro.configs.base import get_arch
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: llama3.2 family scaled to d=512 / 8 layers / 32k vocab
+    cfg = dataclasses.replace(
+        get_arch("llama3.2-3b"), name="llama-100m",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=32768, param_dtype="float32",
+        compute_dtype="float32", q_chunk=128, tie_embeddings=False)
+    from repro.configs.base import register
+    register(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr = Trainer(cfg=cfg, batch=args.batch, seq_len=args.seq_len,
+                     ckpt_dir=ckpt_dir, ckpt_every=100, peak_lr=3e-3)
+        t0 = time.monotonic()
+        tr.run(args.steps)
+        dt = time.monotonic() - t0
+        tok_per_s = args.batch * args.seq_len * len(tr.history) / dt
+        first = sum(tr.history[:10]) / 10
+        last = sum(tr.history[-10:]) / 10
+        print(f"{len(tr.history)} steps in {dt:.1f}s "
+              f"({tok_per_s:,.0f} tok/s on this host)")
+        print(f"loss: {first:.4f} -> {last:.4f}")
+        assert last < first - 0.5, "loss did not decrease enough"
+        print("loss decreased — OK")
+
+
+if __name__ == "__main__":
+    main()

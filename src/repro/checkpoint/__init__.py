@@ -1,0 +1,5 @@
+from .ckpt import (latest_checkpoint, restore_checkpoint, save_checkpoint,
+                   AsyncCheckpointer)
+
+__all__ = ["latest_checkpoint", "restore_checkpoint", "save_checkpoint",
+           "AsyncCheckpointer"]

@@ -1,0 +1,19 @@
+"""cmnnc core: the paper's compiler + CM-accelerator simulator."""
+
+from .compiler import compile_model, serialize_config
+from .graph import (Graph, build_fig2_graph, build_lenet_like,
+                    build_resnet_block_chain, execute_reference)
+from .hwspec import ChipSpec, CoreSpec, make_chip
+from .mapping import MappingError, map_partitions
+from .partition import PartitionError, partition_graph
+from .simulator import DeadlockError, RawViolation, Simulator
+
+__all__ = [
+    "Graph", "build_fig2_graph", "build_lenet_like",
+    "build_resnet_block_chain", "execute_reference",
+    "ChipSpec", "CoreSpec", "make_chip",
+    "MappingError", "map_partitions",
+    "PartitionError", "partition_graph",
+    "DeadlockError", "RawViolation", "Simulator",
+    "compile_model", "serialize_config",
+]

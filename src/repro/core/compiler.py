@@ -1,0 +1,58 @@
+"""cmnnc — end-to-end compilation (paper §3).
+
+``compile_model(graph, chip)`` runs the full flow:
+    partitioning (§3.1)  ->  Z3 mapping (§3.1)  ->  lowering (§3.2), which
+    internally computes the Appendix-A ``S`` relations and generates the LCU
+    automata code.
+
+The result is an ``AcceleratorProgram``: the serializable bundle of per-unit
+configurations the paper describes ("these configurations, bundled together
+and serialized, initialize the accelerator").
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Optional
+
+import numpy as np
+
+from .graph import Graph
+from .hwspec import ChipSpec
+from .lowering import AcceleratorProgram, lower
+from .mapping import map_partitions
+from .partition import partition_graph
+
+
+def compile_model(graph: Graph, chip: ChipSpec,
+                  quantizer=None) -> AcceleratorProgram:
+    pg = partition_graph(graph)
+    mapping = map_partitions(pg, chip)
+    return lower(pg, mapping, quantizer=quantizer)
+
+
+def serialize_config(prog: AcceleratorProgram) -> str:
+    """Serialized configuration bundle (initialization payload, paper §3)."""
+    cores = {}
+    for cid, cfg in prog.cores.items():
+        cores[str(cid)] = dict(
+            partition=cfg.partition_idx,
+            iter_bounds=list(cfg.iter_bounds),
+            xbar=(cfg.xbar_node.op if cfg.xbar_node else None),
+            xbar_shape=(list(cfg.xbar_matrix.shape)
+                        if cfg.xbar_matrix is not None else None),
+            dpu_program=cfg.dpu_listing(),
+            lcu={v: dict(src_partition=lc.src_partition,
+                         pad=lc.pad,
+                         shape=list(lc.shape),
+                         s_code=lc.gen_src)
+                 for v, lc in cfg.lcu.items()},
+        )
+    return json.dumps(dict(
+        cores=cores,
+        gcu=dict(input=prog.gcu.input_value,
+                 input_shape=list(prog.gcu.input_shape),
+                 dst_cores=prog.gcu.dst_cores,
+                 outputs={k: list(v) for k, v in prog.gcu.outputs.items()}),
+        mapping={str(k): v for k, v in prog.mapping.items()},
+    ), indent=2)

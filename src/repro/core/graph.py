@@ -1,0 +1,299 @@
+"""Dataflow-graph IR for the cmnnc compiler (paper §3).
+
+The paper consumes ONNX models; offline we provide an equivalent in-memory IR
+with the same semantics: a DAG of operator nodes over named tensors, plus
+initializer data (weights).  Tensors are single-image, channel-first:
+``(C, H, W)`` — the paper ignores the outer (streaming) batch loop (§3.3).
+
+Supported ops (the CNN families the paper targets):
+  conv2d   — lowered to the crossbar MxV (paper Listing 1)
+  gemm     — fully-connected layer, also a crossbar op
+  relu     — DPU elementwise
+  add      — DPU elementwise (skip connections, paper Fig. 2)
+  maxpool2d / avgpool2d — DPU windowed reduction
+  global_avgpool — DPU reduction
+  flatten  — layout-only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+CROSSBAR_OPS = ("conv2d", "gemm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueInfo:
+    """Shape/dtype metadata for a named tensor."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class Node:
+    """A single operator in the dataflow graph."""
+
+    name: str
+    op: str
+    inputs: List[str]
+    outputs: List[str]
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Node({self.name}:{self.op} {self.inputs}->{self.outputs})"
+
+
+class Graph:
+    """A DAG of nodes.  Nodes are stored in topological order."""
+
+    def __init__(self) -> None:
+        self.nodes: List[Node] = []
+        self.values: Dict[str, ValueInfo] = {}
+        self.weights: Dict[str, np.ndarray] = {}
+        self.inputs: List[str] = []
+        self.outputs: List[str] = []
+
+    # ------------------------------------------------------------------ build
+    def add_input(self, name: str, shape: Sequence[int], dtype: str = "float32") -> str:
+        self.values[name] = ValueInfo(name, tuple(shape), dtype)
+        self.inputs.append(name)
+        return name
+
+    def add_weight(self, name: str, data: np.ndarray) -> str:
+        self.weights[name] = np.asarray(data, dtype=np.float32)
+        self.values[name] = ValueInfo(name, tuple(data.shape), "float32")
+        return name
+
+    def add_node(self, node: Node, out_shape: Sequence[int], dtype: str = "float32") -> str:
+        for i in node.inputs:
+            if i not in self.values:
+                raise ValueError(f"{node.name}: unknown input {i!r}")
+        (out,) = node.outputs
+        if out in self.values:
+            raise ValueError(f"{node.name}: output {out!r} already defined (SSA)")
+        self.values[out] = ValueInfo(out, tuple(out_shape), dtype)
+        self.nodes.append(node)
+        return out
+
+    def mark_output(self, name: str) -> None:
+        self.outputs.append(name)
+
+    # ------------------------------------------------------------- operators
+    def conv2d(self, name: str, x: str, w: str, bias: Optional[str] = None,
+               stride: int = 1, pad: int = 0) -> str:
+        fl, c, fh, fw = self.values[w].shape
+        ci, h, wd = self.values[x].shape
+        assert c == ci, f"{name}: channel mismatch {c} vs {ci}"
+        oh = (h + 2 * pad - fh) // stride + 1
+        ow = (wd + 2 * pad - fw) // stride + 1
+        inputs = [x, w] + ([bias] if bias else [])
+        node = Node(name, "conv2d", inputs, [name + ":out"],
+                    dict(stride=stride, pad=pad))
+        return self.add_node(node, (fl, oh, ow))
+
+    def gemm(self, name: str, x: str, w: str, bias: Optional[str] = None) -> str:
+        od, idim = self.values[w].shape
+        (xin,) = (int(np.prod(self.values[x].shape)),)
+        assert idim == xin, f"{name}: gemm dim mismatch {idim} vs {xin}"
+        inputs = [x, w] + ([bias] if bias else [])
+        node = Node(name, "gemm", inputs, [name + ":out"], {})
+        return self.add_node(node, (od,))
+
+    def relu(self, name: str, x: str) -> str:
+        node = Node(name, "relu", [x], [name + ":out"], {})
+        return self.add_node(node, self.values[x].shape)
+
+    def add(self, name: str, a: str, b: str) -> str:
+        assert self.values[a].shape == self.values[b].shape, \
+            f"{name}: add shape mismatch"
+        node = Node(name, "add", [a, b], [name + ":out"], {})
+        return self.add_node(node, self.values[a].shape)
+
+    def maxpool2d(self, name: str, x: str, k: int = 2, stride: int = 2) -> str:
+        c, h, w = self.values[x].shape
+        oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+        node = Node(name, "maxpool2d", [x], [name + ":out"], dict(k=k, stride=stride))
+        return self.add_node(node, (c, oh, ow))
+
+    def avgpool2d(self, name: str, x: str, k: int = 2, stride: int = 2) -> str:
+        c, h, w = self.values[x].shape
+        oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+        node = Node(name, "avgpool2d", [x], [name + ":out"], dict(k=k, stride=stride))
+        return self.add_node(node, (c, oh, ow))
+
+    def global_avgpool(self, name: str, x: str) -> str:
+        c, h, w = self.values[x].shape
+        node = Node(name, "global_avgpool", [x], [name + ":out"], {})
+        return self.add_node(node, (c,))
+
+    def flatten(self, name: str, x: str) -> str:
+        node = Node(name, "flatten", [x], [name + ":out"], {})
+        return self.add_node(node, (int(np.prod(self.values[x].shape)),))
+
+    # ----------------------------------------------------------------- query
+    def producer_of(self, value: str) -> Optional[Node]:
+        for n in self.nodes:
+            if value in n.outputs:
+                return n
+        return None
+
+    def consumers_of(self, value: str) -> List[Node]:
+        return [n for n in self.nodes if value in n.inputs]
+
+    def validate(self) -> None:
+        seen = set(self.inputs) | set(self.weights)
+        for n in self.nodes:
+            for i in n.inputs:
+                if i not in seen:
+                    raise ValueError(f"graph not topologically ordered at {n.name}: {i}")
+            seen.update(n.outputs)
+        for o in self.outputs:
+            if o not in seen:
+                raise ValueError(f"undefined graph output {o}")
+
+
+# ============================================================== reference exec
+def execute_reference(graph: Graph, feeds: Dict[str, np.ndarray],
+                      mxv_fn=None) -> Dict[str, np.ndarray]:
+    """Pure-numpy oracle executor (paper's 'functional semantics').
+
+    ``mxv_fn(m, v) -> y`` lets callers swap in the quantized crossbar MxV so
+    the simulator comparison is apples-to-apples.  Defaults to exact matmul.
+    """
+    if mxv_fn is None:
+        mxv_fn = lambda m, v: m @ v
+    env: Dict[str, np.ndarray] = {}
+    env.update({k: np.asarray(v, np.float32) for k, v in feeds.items()})
+    env.update(graph.weights)
+    for node in graph.nodes:
+        env[node.outputs[0]] = _exec_node(graph, node, env, mxv_fn)
+    return {o: env[o] for o in graph.outputs}
+
+
+def _exec_node(graph: Graph, node: Node, env: Dict[str, np.ndarray], mxv_fn):
+    op = node.op
+    if op == "conv2d":
+        x = env[node.inputs[0]]
+        w = graph.weights[node.inputs[1]]
+        b = graph.weights[node.inputs[2]] if len(node.inputs) > 2 else None
+        return conv2d_mxv(x, w, b, node.attrs["stride"], node.attrs["pad"], mxv_fn)
+    if op == "gemm":
+        x = env[node.inputs[0]].reshape(-1)
+        w = graph.weights[node.inputs[1]]
+        y = mxv_fn(w, x)
+        if len(node.inputs) > 2:
+            y = y + graph.weights[node.inputs[2]]
+        return y
+    if op == "relu":
+        return np.maximum(env[node.inputs[0]], 0.0)
+    if op == "add":
+        return env[node.inputs[0]] + env[node.inputs[1]]
+    if op in ("maxpool2d", "avgpool2d"):
+        x = env[node.inputs[0]]
+        k, s = node.attrs["k"], node.attrs["stride"]
+        c, h, w = x.shape
+        oh, ow = (h - k) // s + 1, (w - k) // s + 1
+        out = np.empty((c, oh, ow), np.float32)
+        red = np.max if op == "maxpool2d" else np.mean
+        for i in range(oh):
+            for j in range(ow):
+                out[:, i, j] = red(x[:, i * s:i * s + k, j * s:j * s + k], axis=(1, 2))
+        return out
+    if op == "global_avgpool":
+        return env[node.inputs[0]].mean(axis=(1, 2))
+    if op == "flatten":
+        return env[node.inputs[0]].reshape(-1)
+    raise NotImplementedError(op)
+
+
+def conv2d_mxv(inp: np.ndarray, flt: np.ndarray, bias, stride: int, pad: int,
+               mxv_fn) -> np.ndarray:
+    """Convolution via MxV — the paper's Listing 1, verbatim semantics.
+
+    The filter tensor is reshaped to the crossbar matrix ``(FL, C*FH*FW)``;
+    each output pixel is one MxV over the flattened input window.
+    """
+    fl, c, fh, fw = flt.shape
+    if pad:
+        inp = np.pad(inp, ((0, 0), (pad, pad), (pad, pad)))
+    _, ih, iw = inp.shape
+    oh = (ih - fh) // stride + 1
+    ow = (iw - fw) // stride + 1
+    m = flt.reshape(fl, c * fh * fw)
+    out = np.empty((fl, oh, ow), np.float32)
+    for i in range(oh):
+        for j in range(ow):
+            v = inp[:, i * stride:i * stride + fh, j * stride:j * stride + fw].reshape(-1)
+            out[:, i, j] = mxv_fn(m, v)
+    if bias is not None:
+        out += bias[:, None, None]
+    return out
+
+
+# ============================================================ example builders
+def build_fig2_graph(c: int = 4, h: int = 8, w: int = 8, seed: int = 0) -> Graph:
+    """The paper's Fig. 2: two convolutions and an addition (residual)."""
+    rng = np.random.default_rng(seed)
+    g = Graph()
+    x = g.add_input("x", (c, h, w))
+    w1 = g.add_weight("w1", rng.normal(size=(c, c, 3, 3), scale=0.2))
+    w2 = g.add_weight("w2", rng.normal(size=(c, c, 3, 3), scale=0.2))
+    o1 = g.conv2d("conv1", x, w1, pad=1)
+    o2 = g.conv2d("conv2", o1, w2, pad=1)
+    o3 = g.add("add", o1, o2)
+    g.mark_output(o3)
+    g.validate()
+    return g
+
+
+def build_lenet_like(in_ch: int = 1, img: int = 12, n_classes: int = 10,
+                     seed: int = 0) -> Graph:
+    """conv-relu-pool ×2 → gemm.  Small LeNet-style pipeline."""
+    rng = np.random.default_rng(seed)
+    g = Graph()
+    x = g.add_input("x", (in_ch, img, img))
+    w1 = g.add_weight("w1", rng.normal(size=(4, in_ch, 3, 3), scale=0.3))
+    b1 = g.add_weight("b1", rng.normal(size=(4,), scale=0.1))
+    w2 = g.add_weight("w2", rng.normal(size=(8, 4, 3, 3), scale=0.3))
+    fc_in = 8 * (((img - 2) // 2 - 2) // 2) ** 2
+    wf = g.add_weight("wf", rng.normal(size=(n_classes, fc_in), scale=0.2))
+    h1 = g.conv2d("conv1", x, w1, bias=b1)
+    h1 = g.relu("relu1", h1)
+    h1 = g.maxpool2d("pool1", h1)
+    h2 = g.conv2d("conv2", h1, w2)
+    h2 = g.relu("relu2", h2)
+    h2 = g.maxpool2d("pool2", h2)
+    hf = g.flatten("flat", h2)
+    out = g.gemm("fc", hf, wf)
+    g.mark_output(out)
+    g.validate()
+    return g
+
+
+def build_resnet_block_chain(n_blocks: int = 2, c: int = 4, img: int = 8,
+                             seed: int = 0) -> Graph:
+    """A chain of residual blocks (conv-relu-conv-add-relu), paper Fig. 2 style."""
+    rng = np.random.default_rng(seed)
+    g = Graph()
+    x = g.add_input("x", (c, img, img))
+    cur = x
+    for b in range(n_blocks):
+        w1 = g.add_weight(f"b{b}w1", rng.normal(size=(c, c, 3, 3), scale=0.2))
+        w2 = g.add_weight(f"b{b}w2", rng.normal(size=(c, c, 3, 3), scale=0.2))
+        h = g.conv2d(f"b{b}conv1", cur, w1, pad=1)
+        h = g.relu(f"b{b}relu1", h)
+        h = g.conv2d(f"b{b}conv2", h, w2, pad=1)
+        h = g.add(f"b{b}add", cur, h)
+        cur = g.relu(f"b{b}relu2", h)
+    g.mark_output(cur)
+    g.validate()
+    return g

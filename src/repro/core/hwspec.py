@@ -1,0 +1,87 @@
+"""Hardware description of the CM accelerator (paper §2).
+
+The compiler consumes: number of cores, per-core crossbar width, local SRAM
+size, and the interconnect topology as a directed graph (paper: "we decide to
+expose the interconnect topology to the compiler").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Iterable, Tuple
+
+Edge = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSpec:
+    """One CM core: crossbar of ``width``×``width`` cells + SRAM + DPU."""
+
+    width: int = 256
+    sram_bytes: int = 64 * 1024  # "typically, a few kilobytes of SRAM"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """The CM accelerator chip: cores + interconnect + global buffer."""
+
+    n_cores: int
+    core: CoreSpec
+    edges: FrozenSet[Edge]            # directed: (src can send to dst)
+    gmem_bytes: int = 1 << 20
+    dma_pixels_per_cycle: int = 4     # GCU -> GMEM -> input-core stream rate
+
+    def connected(self, a: int, b: int) -> bool:
+        return (a, b) in self.edges
+
+
+# ------------------------------------------------------------------ topologies
+def all_to_all(n: int) -> FrozenSet[Edge]:
+    return frozenset((a, b) for a in range(n) for b in range(n) if a != b)
+
+
+def chain(n: int) -> FrozenSet[Edge]:
+    return frozenset((i, i + 1) for i in range(n - 1))
+
+
+def ring(n: int) -> FrozenSet[Edge]:
+    return frozenset((i, (i + 1) % n) for i in range(n))
+
+
+def grid2d(rows: int, cols: int) -> FrozenSet[Edge]:
+    """Bidirectional 2-D mesh."""
+    edges = set()
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                edges |= {(i, i + 1), (i + 1, i)}
+            if r + 1 < rows:
+                edges |= {(i, i + cols), (i + cols, i)}
+    return frozenset(edges)
+
+
+def banded(n: int, k: int = 5) -> FrozenSet[Edge]:
+    """Forward-banded DAG topology: core i can send to i+1 .. i+k.
+
+    This is our stand-in for the 5-Parallel-Prism of Dazzi et al. [33]: a
+    bounded-degree topology whose forward skip edges are exactly what residual
+    CNNs (paper Fig. 2) need — the skip connection rides the (i, i+2) edge
+    while the main path uses (i, i+1).
+    """
+    return frozenset((i, i + d) for i in range(n) for d in range(1, k + 1)
+                     if i + d < n)
+
+
+def make_chip(n_cores: int, topology: str = "all_to_all", width: int = 256,
+              sram_bytes: int = 256 * 1024, **kw) -> ChipSpec:
+    builders = {
+        "all_to_all": lambda: all_to_all(n_cores),
+        "chain": lambda: chain(n_cores),
+        "ring": lambda: ring(n_cores),
+        "banded": lambda: banded(n_cores, kw.pop("k", 5)),
+        "grid2d": lambda: grid2d(kw.pop("rows", 1), kw.pop("cols", n_cores)),
+    }
+    edges = builders[topology]()
+    return ChipSpec(n_cores=n_cores, core=CoreSpec(width, sram_bytes),
+                    edges=edges, **kw)

@@ -1,0 +1,366 @@
+"""Lowering (paper §3.2): produce per-core configurations.
+
+For every partition we emit a ``CoreConfig`` holding
+  * the crossbar programming (the reshaped weight matrix, paper Listing 1),
+  * the DPU program (the fused non-crossbar ops + send instructions),
+  * the LCU configuration: one dependency automaton per cross-partition input
+    array — the Appendix-A ``S`` relation compiled to Python (generated code,
+    §3.4) plus its enumerated table form (the restricted-hardware variant,
+    §3.5).
+
+Array coordinates in all ISL relations are *unpadded* producer coordinates;
+padding reads clip out of the relations automatically (they are never
+written), and each consumer stores its own locally-padded SRAM copy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import islpy as isl
+import numpy as np
+
+from . import poly
+from .graph import CROSSBAR_OPS, Graph, Node
+from .partition import GCU_PARTITION, PartitionedGraph
+
+Point = Tuple[int, ...]
+
+
+# ---------------------------------------------------------------- write specs
+@dataclasses.dataclass
+class WriteSpec:
+    """How a producer partition finalizes an array, per iteration.
+
+    kind:
+      'pixel'      — value v[:, oh, ow] finalized at iteration (oh, ow)
+      'pool'       — pooled v[:, ph, pw] finalized when its window completes
+      'full'       — whole array finalized at the single gemm iteration
+      'reduce'     — scalar-per-channel (global pool) finalized at last iter
+      'gcu_stream' — graph input, streamed row-major by the GCU
+    """
+
+    value: str
+    kind: str
+    shape: Tuple[int, ...]
+    attrs: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def isl_write(self, iter_name: str) -> isl.Map:
+        shp = self.shape
+        if self.kind == "pixel":
+            c, h, w = shp
+            return isl.Map(
+                f"{{ {iter_name}[oh,ow] -> A[c,ih,iw] : 0<=oh<{h} and 0<=ow<{w} "
+                f"and ih=oh and iw=ow and 0<=c<{c} }}")
+        if self.kind == "pool":
+            c, ph, pw = shp
+            k, s = self.attrs["k"], self.attrs["stride"]
+            return isl.Map(
+                f"{{ {iter_name}[oh,ow] -> A[c,i,j] : 0<=i<{ph} and 0<=j<{pw} "
+                f"and oh = {s}*i + {k - 1} and ow = {s}*j + {k - 1} and 0<=c<{c} }}")
+        if self.kind == "full":
+            (d,) = shp
+            return isl.Map(f"{{ {iter_name}[i] -> A[d] : i = 0 and 0<=d<{d} }}")
+        if self.kind == "reduce":
+            c = shp[0]
+            oh, ow = self.attrs["last_oh"], self.attrs["last_ow"]
+            return isl.Map(
+                f"{{ {iter_name}[oh,ow] -> A[c] : oh={oh} and ow={ow} and 0<=c<{c} }}")
+        if self.kind == "gcu_stream":
+            c, h, w = shp
+            return isl.Map(
+                f"{{ {iter_name}[ih,iw] -> A[c,i,j] : i=ih and j=iw and "
+                f"0<=ih<{h} and 0<=iw<{w} and 0<=c<{c} }}")
+        raise NotImplementedError(self.kind)
+
+
+# ----------------------------------------------------------------- read specs
+def conv_read_relation(iter_name: str, out_hw: Tuple[int, int],
+                       in_shape: Tuple[int, int, int], fh: int, fw: int,
+                       stride: int, pad: int) -> isl.Map:
+    """Paper Listing 2, generalized with stride/pad and extent clipping."""
+    oh, ow = out_hw
+    c, ih, iw = in_shape
+    return isl.Map(
+        f"{{ {iter_name}[oh,ow] -> A[c,i,j] : 0<=oh<{oh} and 0<=ow<{ow} and "
+        f"0<=c<{c} and {stride}*oh-{pad} <= i < {stride}*oh-{pad}+{fh} and "
+        f"{stride}*ow-{pad} <= j < {stride}*ow-{pad}+{fw} and "
+        f"0<=i<{ih} and 0<=j<{iw} }}")
+
+
+def pointwise_read_relation(iter_name: str, out_hw: Tuple[int, int],
+                            in_shape: Tuple[int, int, int]) -> isl.Map:
+    c, h, w = in_shape
+    oh, ow = out_hw
+    assert (h, w) == (oh, ow), "pointwise read at mismatched resolution"
+    return isl.Map(
+        f"{{ {iter_name}[oh,ow] -> A[c,i,j] : i=oh and j=ow and "
+        f"0<=oh<{h} and 0<=ow<{w} and 0<=c<{c} }}")
+
+
+def full_read_relation(iter_name: str, in_shape: Tuple[int, ...]) -> isl.Map:
+    dims = [f"d{i}" for i in range(len(in_shape))]
+    cons = " and ".join(f"0<=d{i}<{s}" for i, s in enumerate(in_shape))
+    return isl.Map(
+        f"{{ {iter_name}[i] -> A[{','.join(dims)}] : i=0 and {cons} }}")
+
+
+def pool_read_relation(iter_name: str, out_hw: Tuple[int, int],
+                       in_shape: Tuple[int, int, int], k: int,
+                       stride: int) -> isl.Map:
+    """A crossbar-less pool partition reading a remote array (rare path)."""
+    c, ih, iw = in_shape
+    oh, ow = out_hw
+    return isl.Map(
+        f"{{ {iter_name}[oh,ow] -> A[c,i,j] : 0<=oh<{oh} and 0<=ow<{ow} and "
+        f"0<=c<{c} and {stride}*oh <= i < {stride}*oh+{k} and "
+        f"{stride}*ow <= j < {stride}*ow+{k} and 0<=i<{ih} and 0<=j<{iw} }}")
+
+
+# ---------------------------------------------------------------- core config
+@dataclasses.dataclass
+class LcuArrayConfig:
+    value: str
+    src_partition: int
+    dep: poly.DepInfo
+    gen_src: str                      # generated Python source for S (paper §3.4)
+    pad: int                          # local SRAM padding for this array
+    shape: Tuple[int, ...]            # unpadded shape
+
+    def make_frontier(self) -> poly.Frontier:
+        ns: Dict[str, object] = {}
+        exec(compile(self.gen_src, "<lcu>", "exec"), ns)  # noqa: S102
+        return poly.Frontier(self.dep, ns["s_eval"])
+
+
+@dataclasses.dataclass
+class SendSpec:
+    value: str
+    write: WriteSpec
+    dst_cores: List[int]              # consumer cores (empty => GMEM output)
+    to_gmem: bool = False
+
+
+@dataclasses.dataclass
+class CoreConfig:
+    core_id: int
+    partition_idx: int
+    iter_bounds: Tuple[int, ...]      # iteration space = box [0,b0) x [0,b1)
+    xbar_node: Optional[Node]
+    xbar_matrix: Optional[np.ndarray]  # (rows, cols) programmed into crossbar
+    xbar_bias: Optional[np.ndarray]
+    dpu_nodes: List[Node]             # fused non-crossbar ops, topo order
+    lcu: Dict[str, LcuArrayConfig]    # per cross-partition input array
+    sends: List[SendSpec]
+    conv_attrs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    xbar_input: Optional[str] = None  # value name the crossbar reads
+
+    def dpu_listing(self) -> List[str]:
+        """Human-readable DPU 'instruction sequence' for the config dump."""
+        out = []
+        if self.xbar_node is not None:
+            out.append(f"XBAR_{self.xbar_node.op.upper()} "
+                       f"in={self.xbar_input}")
+            if self.xbar_bias is not None:
+                out.append("ADD_BIAS")
+        for n in self.dpu_nodes:
+            out.append(f"{n.op.upper()} {','.join(n.inputs)} -> {n.outputs[0]}")
+        for s in self.sends:
+            tgt = "GMEM" if s.to_gmem else f"cores{s.dst_cores}"
+            out.append(f"SEND {s.value}[{s.write.kind}] -> {tgt}")
+        return out
+
+
+@dataclasses.dataclass
+class GcuConfig:
+    input_value: str
+    input_shape: Tuple[int, ...]
+    dst_cores: List[int]
+    outputs: Dict[str, Tuple[int, ...]]   # value -> shape collected in GMEM
+
+
+@dataclasses.dataclass
+class AcceleratorProgram:
+    cores: Dict[int, CoreConfig]
+    gcu: GcuConfig
+    mapping: Dict[int, int]              # partition -> core
+    pgraph: PartitionedGraph
+
+
+class LoweringError(Exception):
+    pass
+
+
+# ------------------------------------------------------------------- lowering
+def _resolve_alias(graph: Graph, value: str, aliases: Dict[str, str]) -> str:
+    while value in aliases:
+        value = aliases[value]
+    return value
+
+
+def _conv_iter_bounds(graph: Graph, node: Node) -> Tuple[int, int]:
+    _, oh, ow = graph.values[node.outputs[0]].shape
+    return oh, ow
+
+
+def lower(pg: PartitionedGraph, mapping: Dict[int, int],
+          quantizer=None) -> AcceleratorProgram:
+    """Produce per-core configurations (paper's 'lowering' step).
+
+    ``quantizer(w) -> w'`` optionally models crossbar programming noise /
+    quantization; identity by default.
+    """
+    graph = pg.graph
+    aliases: Dict[str, str] = {}
+    for node in graph.nodes:
+        if node.op == "flatten":
+            aliases[node.outputs[0]] = node.inputs[0]
+
+    # ---- write specs: how each cross-partition value gets finalized
+    write_specs: Dict[str, WriteSpec] = {}
+    for v in graph.inputs:
+        write_specs[v] = WriteSpec(v, "gcu_stream", graph.values[v].shape)
+    for node in graph.nodes:
+        out = node.outputs[0]
+        shape = graph.values[out].shape
+        if node.op in ("conv2d", "relu", "add"):
+            if len(shape) == 3:
+                write_specs[out] = WriteSpec(out, "pixel", shape)
+            else:  # relu/add over 1-D (post-gemm) tensors
+                write_specs[out] = WriteSpec(out, "full", shape)
+        elif node.op in ("maxpool2d", "avgpool2d"):
+            write_specs[out] = WriteSpec(out, "pool", shape,
+                                         dict(k=node.attrs["k"],
+                                              stride=node.attrs["stride"]))
+        elif node.op == "global_avgpool":
+            src_shape = graph.values[node.inputs[0]].shape
+            write_specs[out] = WriteSpec(out, "reduce", shape,
+                                         dict(last_oh=src_shape[1] - 1,
+                                              last_ow=src_shape[2] - 1))
+        elif node.op == "gemm":
+            write_specs[out] = WriteSpec(out, "full", shape)
+        elif node.op == "flatten":
+            pass
+        else:
+            raise LoweringError(f"no write spec for op {node.op}")
+
+    cores: Dict[int, CoreConfig] = {}
+    for part in pg.partitions:
+        core_id = mapping[part.idx]
+        xbar = part.crossbar
+
+        # Iteration space.
+        if xbar is not None and xbar.op == "conv2d":
+            bounds = _conv_iter_bounds(graph, xbar)
+            iname = "IT"
+        elif xbar is not None:  # gemm
+            bounds = (1,)
+            iname = "IT"
+        else:
+            first_out = part.nodes[0].outputs[0]
+            shp = graph.values[first_out].shape
+            bounds = tuple(shp[1:]) if len(shp) == 3 else (1,)
+            iname = "IT"
+
+        # Crossbar programming (paper Listing 1: reshape to (FL, C*FH*FW)).
+        xbar_matrix = xbar_bias = None
+        conv_attrs: Dict[str, int] = {}
+        xbar_input = None
+        if xbar is not None:
+            w = graph.weights[xbar.inputs[1]]
+            if xbar.op == "conv2d":
+                fl, c, fh, fw = w.shape
+                xbar_matrix = w.reshape(fl, c * fh * fw)
+                conv_attrs = dict(stride=xbar.attrs["stride"],
+                                  pad=xbar.attrs["pad"], fh=fh, fw=fw)
+            else:
+                xbar_matrix = w
+            if quantizer is not None:
+                xbar_matrix = quantizer(xbar_matrix)
+            if len(xbar.inputs) > 2:
+                xbar_bias = graph.weights[xbar.inputs[2]]
+            xbar_input = _resolve_alias(graph, xbar.inputs[0], aliases)
+
+        # ---- read relations per cross-partition input array
+        reads: Dict[str, isl.Map] = {}
+        in_pads: Dict[str, int] = {}
+        cross_in = {_resolve_alias(graph, v, aliases): src
+                    for v, src in pg.cross_edges_into(part.idx).items()}
+        for node in part.nodes:
+            if node.op == "flatten":
+                continue
+            for raw_in in node.inputs:
+                if raw_in in graph.weights:
+                    continue
+                v = _resolve_alias(graph, raw_in, aliases)
+                if v not in cross_in:
+                    continue  # intra-partition value
+                in_shape = graph.values[v].shape
+                if node.op == "conv2d":
+                    rel = conv_read_relation(
+                        iname, bounds, in_shape, conv_attrs["fh"],
+                        conv_attrs["fw"], conv_attrs["stride"],
+                        conv_attrs["pad"])
+                    in_pads[v] = max(in_pads.get(v, 0), conv_attrs["pad"])
+                elif node.op in ("relu", "add"):
+                    if len(in_shape) == 3:
+                        rel = pointwise_read_relation(iname, bounds, in_shape)
+                    else:
+                        rel = full_read_relation(iname, in_shape)
+                elif node.op in ("maxpool2d", "avgpool2d"):
+                    rel = pool_read_relation(iname, tuple(
+                        graph.values[node.outputs[0]].shape[1:]), in_shape,
+                        node.attrs["k"], node.attrs["stride"])
+                elif node.op in ("gemm", "global_avgpool"):
+                    rel = full_read_relation(iname, in_shape)
+                else:
+                    raise LoweringError(f"no read relation for {node.op}")
+                reads[v] = rel if v not in reads else reads[v].union(rel)
+                in_pads.setdefault(v, 0)
+
+        # ---- LCU: S per input array (Appendix A), with generated evaluator
+        lcu: Dict[str, LcuArrayConfig] = {}
+        for v, rel in reads.items():
+            w1 = write_specs[v].isl_write("WR")
+            dep = poly.compute_dep_info(w1, rel)
+            gen_src, _ = poly.generate_s_evaluator(dep)
+            lcu[v] = LcuArrayConfig(value=v, src_partition=cross_in[v],
+                                    dep=dep, gen_src=gen_src,
+                                    pad=in_pads[v],
+                                    shape=graph.values[v].shape)
+
+        # ---- sends: every value of this partition consumed elsewhere/GMEM
+        sends: List[SendSpec] = []
+        produced = {n.outputs[0] for n in part.nodes}
+        for v in sorted(produced):
+            rv = _resolve_alias(graph, v, aliases)
+            if rv != v:
+                continue  # aliases (flatten) are layout-only, never sent
+            dsts = sorted({
+                mapping[dst] for (src, dst), vals in pg.edges.items()
+                if src == part.idx
+                and any(_resolve_alias(graph, ev, aliases) == v for ev in vals)})
+            to_gmem = any(_resolve_alias(graph, o, aliases) == v
+                          for o in graph.outputs)
+            if dsts or to_gmem:
+                sends.append(SendSpec(v, write_specs[v], dsts, to_gmem))
+
+        dpu_nodes = [n for n in part.nodes
+                     if n.op not in CROSSBAR_OPS and n.op != "flatten"]
+        cores[core_id] = CoreConfig(
+            core_id=core_id, partition_idx=part.idx, iter_bounds=bounds,
+            xbar_node=xbar, xbar_matrix=xbar_matrix, xbar_bias=xbar_bias,
+            dpu_nodes=dpu_nodes, lcu=lcu, sends=sends,
+            conv_attrs=conv_attrs, xbar_input=xbar_input)
+
+    # ---- GCU config
+    if len(graph.inputs) != 1:
+        raise LoweringError("exactly one graph input supported")
+    inp = graph.inputs[0]
+    dst_cores = sorted({mapping[dst] for (src, dst) in pg.edges
+                        if src == GCU_PARTITION})
+    gcu = GcuConfig(input_value=inp, input_shape=graph.values[inp].shape,
+                    dst_cores=dst_cores,
+                    outputs={o: graph.values[o].shape for o in graph.outputs})
+    return AcceleratorProgram(cores=cores, gcu=gcu, mapping=mapping, pgraph=pg)

@@ -1,0 +1,101 @@
+"""Mapping the partition graph onto the chip (paper §3.1).
+
+"We map the partition graph to the CM accelerator, i.e., mapping each
+partition to a CM core and each edge to a connection in the interconnect
+topology, by expressing the problem as a set of constraints in the Z3 SMT
+solver."
+
+Constraints:
+  * each partition on a distinct core;
+  * for every partition edge (p, q), (core(p), core(q)) must be an edge of the
+    interconnect graph;
+  * per-core resource constraints (crossbar width, SRAM footprint) are checked
+    up front since cores are homogeneous.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+import z3
+
+from .graph import Graph
+from .hwspec import ChipSpec
+from .partition import GCU_PARTITION, PartitionedGraph
+
+
+class MappingError(Exception):
+    pass
+
+
+def _xbar_dims(pg: PartitionedGraph, pidx: int) -> Optional[tuple]:
+    xbar = pg.partitions[pidx].crossbar
+    if xbar is None:
+        return None
+    g = pg.graph
+    if xbar.op == "conv2d":
+        fl, c, fh, fw = g.values[xbar.inputs[1]].shape
+        return (fl, c * fh * fw)
+    od, idim = g.values[xbar.inputs[1]].shape
+    return (od, idim)
+
+
+def sram_footprint(pg: PartitionedGraph, pidx: int) -> int:
+    """Bytes of core-local state: cross-partition input arrays + accumulators."""
+    g = pg.graph
+    total = 0
+    for v in pg.cross_edges_into(pidx):
+        total += g.values[v].nbytes
+    for node in pg.partitions[pidx].nodes:
+        if node.op in ("maxpool2d", "avgpool2d", "global_avgpool"):
+            total += g.values[node.outputs[0]].nbytes  # accumulator
+    return total
+
+
+def check_resources(pg: PartitionedGraph, chip: ChipSpec) -> None:
+    for p in pg.partitions:
+        dims = _xbar_dims(pg, p.idx)
+        if dims is not None:
+            rows, cols = dims
+            if rows > chip.core.width or cols > chip.core.width:
+                raise MappingError(
+                    f"partition {p.idx}: crossbar op {p.crossbar.name} needs "
+                    f"{rows}x{cols} > width {chip.core.width} "
+                    f"(paper §3.5: requires graph transformation)")
+        need = sram_footprint(pg, p.idx)
+        if need > chip.core.sram_bytes:
+            raise MappingError(
+                f"partition {p.idx}: SRAM footprint {need}B > "
+                f"{chip.core.sram_bytes}B")
+
+
+def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
+                   timeout_ms: int = 30_000) -> Dict[int, int]:
+    """partition idx -> core id, via Z3.  Raises MappingError when UNSAT."""
+    check_resources(pg, chip)
+    n_parts = len(pg.partitions)
+    if n_parts > chip.n_cores:
+        raise MappingError(f"{n_parts} partitions > {chip.n_cores} cores")
+
+    solver = z3.Solver()
+    solver.set("timeout", timeout_ms)
+    loc = [z3.Int(f"loc_{i}") for i in range(n_parts)]
+    for v in loc:
+        solver.add(v >= 0, v < chip.n_cores)
+    solver.add(z3.Distinct(*loc))
+
+    edge_pairs = sorted(chip.edges)
+    for (src, dst) in pg.edges:
+        if src == GCU_PARTITION:
+            continue  # GCU reaches every core through GMEM
+        solver.add(z3.Or(*[
+            z3.And(loc[src] == a, loc[dst] == b) for (a, b) in edge_pairs
+        ]))
+
+    if solver.check() != z3.sat:
+        raise MappingError(
+            f"Z3: no valid mapping of {n_parts} partitions onto "
+            f"{chip.n_cores}-core chip with {len(chip.edges)} links")
+    model = solver.model()
+    return {i: model[loc[i]].as_long() for i in range(n_parts)}

@@ -1,0 +1,111 @@
+"""Graph partitioning (paper §3.1).
+
+Invariants enforced (verbatim from the paper):
+  1. each partition contains *at most one* crossbar operator (conv2d/gemm);
+  2. the partition graph is acyclic.
+
+Algorithm (also verbatim): iterate nodes in topological order, create a new
+partition whenever a crossbar node is encountered; every other node is bundled
+with the *latest* partition among its producers, which reproduces the paper's
+Fig. 2 resolution (the ADD joins the right-hand-side partition — joining the
+left would create a cycle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .graph import CROSSBAR_OPS, Graph, Node
+
+GCU_PARTITION = -1  # virtual partition for graph inputs (fed by the GCU)
+
+
+@dataclasses.dataclass
+class Partition:
+    idx: int
+    nodes: List[Node] = dataclasses.field(default_factory=list)
+    crossbar: Optional[Node] = None
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    graph: Graph
+    partitions: List[Partition]
+    node_part: Dict[str, int]                 # node name -> partition idx
+    value_part: Dict[str, int]                # value name -> producing partition
+    # (src partition, dst partition) -> shared value names (paper: edges with
+    # the same endpoints are combined into a single shared array)
+    edges: Dict[Tuple[int, int], List[str]]
+
+    def partition_of_value(self, value: str) -> int:
+        return self.value_part[value]
+
+    def cross_edges_into(self, pidx: int) -> Dict[str, int]:
+        """value name -> src partition, for all cross-partition reads of pidx."""
+        out: Dict[str, int] = {}
+        for (src, dst), vals in self.edges.items():
+            if dst == pidx:
+                for v in vals:
+                    out[v] = src
+        return out
+
+
+class PartitionError(Exception):
+    pass
+
+
+def partition_graph(graph: Graph) -> PartitionedGraph:
+    graph.validate()
+    partitions: List[Partition] = []
+    node_part: Dict[str, int] = {}
+    value_part: Dict[str, int] = {v: GCU_PARTITION for v in graph.inputs}
+
+    for node in graph.nodes:
+        if node.op in CROSSBAR_OPS:
+            part = Partition(idx=len(partitions), crossbar=node)
+            partitions.append(part)
+        else:
+            producers = [value_part[i] for i in node.inputs if i in value_part
+                         and i not in graph.weights]
+            latest = max(producers) if producers else GCU_PARTITION
+            if latest == GCU_PARTITION:
+                # A non-crossbar node reading only graph inputs: give it a
+                # crossbar-less partition of its own.
+                part = Partition(idx=len(partitions))
+                partitions.append(part)
+            else:
+                part = partitions[latest]
+        part.nodes.append(node)
+        node_part[node.name] = part.idx
+        for o in node.outputs:
+            value_part[o] = part.idx
+
+    # Invariant 1 holds by construction; double-check anyway.
+    for p in partitions:
+        n_xbar = sum(1 for n in p.nodes if n.op in CROSSBAR_OPS)
+        if n_xbar > 1:
+            raise PartitionError(f"partition {p.idx} has {n_xbar} crossbar ops")
+
+    # Cross-partition edges (combining same-endpoint edges, paper §3.3).
+    edges: Dict[Tuple[int, int], List[str]] = {}
+    for node in graph.nodes:
+        dst = node_part[node.name]
+        for i in node.inputs:
+            if i in graph.weights:
+                continue
+            src = value_part[i]
+            if src != dst:
+                edges.setdefault((src, dst), [])
+                if i not in edges[(src, dst)]:
+                    edges[(src, dst)].append(i)
+
+    # Invariant 2: acyclicity.  With the max-producer rule every edge goes
+    # forward (src < dst); verify.
+    for (src, dst) in edges:
+        if src != GCU_PARTITION and src >= dst:
+            raise PartitionError(f"partition graph has back edge {src}->{dst}")
+
+    return PartitionedGraph(graph=graph, partitions=partitions,
+                            node_part=node_part, value_part=value_part,
+                            edges=edges)

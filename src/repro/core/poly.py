@@ -1,0 +1,243 @@
+"""Polyhedral machinery (paper §3.3 + Appendix A), on real ISL via islpy.
+
+Everything the paper does symbolically we do symbolically:
+
+* iteration spaces / array extents are ISL sets,
+* read/write access relations are ISL maps (paper Listing 2),
+* the dependency-frontier relation ``S : O -> J`` is computed with the exact
+  Appendix-A recipe (K, D, D', L, M, S),
+* the LCU evaluator is *generated code*: the single-valued ``S`` is converted
+  to a piecewise multi-affine function and emitted as Python source, mirroring
+  the paper's ISL-AST -> Python-AST -> bytecode flow (§3.4/§3.5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import islpy as isl
+
+Point = Tuple[int, ...]
+
+
+# --------------------------------------------------------------------- helpers
+def set_from_box(name: str, dims: Sequence[str], ubs: Sequence[int]) -> isl.Set:
+    """{ name[d0,..] : 0 <= di < ubs[i] }."""
+    vars_ = ",".join(dims)
+    cons = " and ".join(f"0 <= {d} < {u}" for d, u in zip(dims, ubs))
+    if not dims:
+        return isl.Set(f"{{ {name}[] }}")
+    return isl.Set(f"{{ {name}[{vars_}] : {cons} }}")
+
+
+def map_from_str(s: str) -> isl.Map:
+    return isl.Map(s)
+
+
+def point_tuple(p: isl.Point, ndim: int) -> Point:
+    return tuple(
+        int(p.get_coordinate_val(isl.dim_type.set, i).to_python()) for i in range(ndim)
+    )
+
+
+def enumerate_set(s: isl.Set) -> List[Point]:
+    """All integer points of a (bounded) set, in lexicographic order."""
+    pts: List[Point] = []
+    nd = s.dim(isl.dim_type.set)
+    s.foreach_point(lambda p: pts.append(point_tuple(p, nd)))
+    pts.sort()
+    return pts
+
+
+def enumerate_map(m: isl.Map) -> List[Tuple[Point, Point]]:
+    """All (in -> out) pairs of a bounded map."""
+    nd_in = m.dim(isl.dim_type.in_)
+    nd_out = m.dim(isl.dim_type.out)
+    pairs: List[Tuple[Point, Point]] = []
+
+    def visit(p: isl.Point) -> None:
+        coords = point_tuple(p, nd_in + nd_out)
+        pairs.append((coords[:nd_in], coords[nd_in:]))
+
+    m.wrap().foreach_point(visit)
+    pairs.sort()
+    return pairs
+
+
+def single_point(s: isl.Set) -> Optional[Point]:
+    if s.is_empty():
+        return None
+    p = s.sample_point()
+    return point_tuple(p, s.dim(isl.dim_type.set))
+
+
+# ------------------------------------------------------------------ Appendix A
+@dataclasses.dataclass
+class DepInfo:
+    """Everything the LCU needs for one (producer-array -> reader) edge."""
+
+    S: isl.Map                  # O -> J   (single-valued after lexmax)
+    D_lexmin: Optional[Point]   # first reader iteration with a dependency
+    D_lexmax: Optional[Point]   # last reader iteration with a dependency
+    reader_ndim: int
+    array_ndim: int
+
+
+def compute_S(W1: isl.Map, R2: isl.Map) -> isl.Map:
+    """Appendix A, verbatim.
+
+    W1 : I -> O  (producer write access relation; injective per location)
+    R2 : J -> O  (reader read access relation)
+    returns S : O -> J, mapping each observed write location to the
+    lexicographically-maximal reader iteration that is then safe to execute.
+    """
+    # K := W1^-1(R2)   (J -> I): pair each read iteration with the write
+    # iterations producing the locations it reads.  Reads of locations never
+    # written (e.g. padding) drop out of the composition automatically.
+    K = R2.apply_range(W1.reverse())
+    # D := dom(K)
+    D = K.domain()
+    if D.is_empty():
+        # Reader never touches producer-written locations (e.g. pure padding):
+        # S is the empty relation in the O -> J space.
+        return isl.Map.empty(R2.reverse().get_space())
+    # D' := D >>= D    (J -> J): j mapped to every iteration zeta <= j
+    Dp = D.lex_ge_set(D)
+    # L := lexmax(K(D'))  (J -> I)
+    L = Dp.apply_range(K).lexmax()
+    # M := W1(L)          (J -> O)
+    M = L.apply_range(W1)
+    # S := lexmax(M^-1)   (O -> J)
+    S = M.reverse().lexmax()
+    return S
+
+
+def compute_dep_info(W1: isl.Map, R2: isl.Map) -> DepInfo:
+    S = compute_S(W1, R2)
+    K = R2.apply_range(W1.reverse())
+    D = K.domain()
+    return DepInfo(
+        S=S,
+        D_lexmin=single_point(D.lexmin()) if not D.is_empty() else None,
+        D_lexmax=single_point(D.lexmax()) if not D.is_empty() else None,
+        reader_ndim=R2.dim(isl.dim_type.in_),
+        array_ndim=W1.dim(isl.dim_type.out),
+    )
+
+
+# ------------------------------------------------------- S -> generated Python
+def _aff_to_py(aff: isl.Aff, invars: List[str]) -> str:
+    """Convert an isl Aff over ``invars`` into a Python expression string.
+
+    Handles integer-division terms (floord) recursively — Python's ``//`` is
+    floor division, matching isl's floord semantics.  Rational coefficients
+    (they appear e.g. for strided accesses) are cleared by scaling the whole
+    Aff by its common denominator first, then flooring at the top level.
+    """
+    den = aff.get_denominator_val().to_python()
+    if den != 1:
+        aff = aff.scale_val(isl.Val.int_from_si(aff.get_ctx(), den))
+    n_in = aff.dim(isl.dim_type.in_)
+    n_div = aff.dim(isl.dim_type.div)
+    terms: List[str] = []
+    for i in range(n_in):
+        c = aff.get_coefficient_val(isl.dim_type.in_, i).to_python()
+        if c:
+            terms.append(f"({c})*{invars[i]}")
+    for d in range(n_div):
+        c = aff.get_coefficient_val(isl.dim_type.div, d).to_python()
+        if c:
+            div = aff.get_div(d)  # an Aff whose value is floor(inner)
+            inner = _aff_to_py(div, invars)
+            terms.append(f"({c})*({inner})")
+    cst_num = aff.get_constant_val().to_python()
+    expr = " + ".join(terms) if terms else "0"
+    expr = f"({expr} + ({cst_num}))"
+    if den != 1:
+        expr = f"(({expr}) // ({den}))"
+    return expr
+
+
+def _constraint_to_py(c: isl.Constraint, invars: List[str]) -> str:
+    aff = c.get_aff()
+    body = _aff_to_py(aff, invars)
+    return f"{body} == 0" if c.is_equality() else f"{body} >= 0"
+
+
+def _bset_to_py(bset: isl.BasicSet, invars: List[str]) -> str:
+    conds = [_constraint_to_py(c, invars) for c in bset.get_constraints()]
+    return " and ".join(conds) if conds else "True"
+
+
+def generate_s_evaluator(dep: DepInfo, fn_name: str = "s_eval") -> Tuple[str, object]:
+    """Generate Python source for evaluating S at an array location.
+
+    Returns ``(source, callable)``.  The callable maps a location tuple to the
+    maximal-safe reader iteration tuple, or ``None`` when this write does not
+    advance the frontier.  This mirrors the paper's §3.4: code generated from
+    the ISL representation, compiled to Python bytecode.
+    """
+    nd_o = dep.array_ndim
+    invars = [f"o{i}" for i in range(nd_o)]
+    lines = [f"def {fn_name}({', '.join(invars) if invars else ''}):"]
+    pma = isl.PwMultiAff.from_map(dep.S)
+    pieces: List[Tuple[isl.Set, isl.MultiAff]] = []
+    pma.foreach_piece(lambda st, ma: pieces.append((st, ma)))
+    if not pieces:
+        lines.append("    return None")
+    for st, ma in pieces:
+        for bset in st.get_basic_sets():
+            cond = _bset_to_py(bset, invars)
+            outs = [
+                _aff_to_py(ma.get_at(j), invars) for j in range(ma.dim(isl.dim_type.out))
+            ]
+            lines.append(f"    if {cond}:")
+            lines.append(f"        return ({', '.join(outs)}{',' if len(outs) == 1 else ''})")
+    lines.append("    return None")
+    src = "\n".join(lines) + "\n"
+    ns: Dict[str, object] = {}
+    exec(compile(src, f"<isl-gen:{fn_name}>", "exec"), ns)  # noqa: S102 - paper's own flow
+    return src, ns[fn_name]
+
+
+def s_table(dep: DepInfo) -> Dict[Point, Point]:
+    """Enumerated S — the 'restricted hardware LCU' variant (paper §3.5)."""
+    return {o: j for o, j in enumerate_map(dep.S)}
+
+
+# ------------------------------------------------------------ frontier automaton
+class Frontier:
+    """The per-array piece of the LCU state machine.
+
+    Tracks the lexicographically-maximal safe reader iteration given the
+    writes observed so far.  Three phases:
+      * before any frontier-advancing write: iterations strictly before
+        ``D_lexmin`` are safe (they have no RAW dependency on this array);
+      * after writes: iterations ``<= S(last advancing write)`` are safe;
+      * once the frontier reaches ``D_lexmax``: every iteration is safe.
+    """
+
+    def __init__(self, dep: DepInfo, evaluator=None):
+        self.dep = dep
+        self.eval = evaluator if evaluator is not None else generate_s_evaluator(dep)[1]
+        self.bound: Optional[Point] = None  # max safe iteration (inclusive)
+        self.unbounded = dep.D_lexmin is None  # array never constrains us
+
+    def observe(self, loc: Point) -> None:
+        if self.unbounded:
+            return
+        j = self.eval(*loc)
+        if j is None:
+            return
+        if self.bound is None or j > self.bound:
+            self.bound = tuple(j)
+        if self.bound == self.dep.D_lexmax:
+            self.unbounded = True
+
+    def safe(self, it: Point) -> bool:
+        if self.unbounded:
+            return True
+        if self.bound is None:
+            return it < self.dep.D_lexmin
+        return it <= self.bound or it < self.dep.D_lexmin

@@ -1,0 +1,425 @@
+"""Cycle-level simulator of the CM accelerator (paper §2 + §3.4).
+
+Faithful to the paper's functional model:
+  * execution proceeds in cycles; per cycle a core performs at most one
+    crossbar MxV followed by its DPU instruction sequence;
+  * data transfers scheduled during cycle t arrive in the remote core's SRAM
+    at cycle t+1; the receiving LCU "snoops" the writes and advances its
+    dependency automaton (the generated-code form of the Appendix-A ``S``);
+  * the GCU streams input data from GMEM to the input cores at a configurable
+    DMA rate and collects output arrays back into GMEM.
+
+The simulator doubles as the correctness oracle harness: with
+``check_raw=True`` every executed iteration asserts that all SRAM locations it
+reads were previously written (an LCU bug would trip this immediately).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .lowering import AcceleratorProgram, CoreConfig, SendSpec
+from .hwspec import ChipSpec
+from . import poly
+
+Point = Tuple[int, ...]
+
+
+class DeadlockError(Exception):
+    pass
+
+
+class RawViolation(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Message:
+    arrive: int
+    dst_core: int          # -1 => GMEM
+    image: int
+    value: str
+    kind: str              # pixel | pool | full | reduce
+    loc: Point             # unpadded representative location
+    payload: np.ndarray
+
+
+@dataclasses.dataclass
+class SimStats:
+    cycles: int = 0
+    busy: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
+    messages: int = 0
+    bytes_sent: int = 0
+    sram_high_water: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    first_busy: Dict[int, int] = dataclasses.field(default_factory=dict)
+    last_busy: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def utilization(self, core: int) -> float:
+        if core not in self.first_busy:
+            return 0.0
+        span = self.last_busy[core] - self.first_busy[core] + 1
+        return self.busy[core] / span
+
+    def mean_utilization(self) -> float:
+        us = [self.utilization(c) for c in self.busy]
+        return float(np.mean(us)) if us else 0.0
+
+
+class _CoreImageState:
+    """Per-(core, image) runtime state."""
+
+    def __init__(self, cfg: CoreConfig):
+        self.sram: Dict[str, np.ndarray] = {}
+        self.frontiers: Dict[str, poly.Frontier] = {}
+        for v, lc in cfg.lcu.items():
+            shp = lc.shape
+            if len(shp) == 3 and lc.pad:
+                c, h, w = shp
+                buf = np.zeros((c, h + 2 * lc.pad, w + 2 * lc.pad), np.float32)
+            else:
+                buf = np.zeros(shp, np.float32)
+            self.sram[v] = buf
+            self.frontiers[v] = lc.make_frontier()
+        self.pool_acc: Dict[str, np.ndarray] = {}
+        self.reduce_acc: Dict[str, np.ndarray] = {}
+        self.counter = 0
+        self.done = False
+        self.written: Dict[str, set] = defaultdict(set)  # RAW oracle
+
+
+def _unflatten(counter: int, bounds: Tuple[int, ...]) -> Point:
+    idx = []
+    for b in reversed(bounds):
+        idx.append(counter % b)
+        counter //= b
+    return tuple(reversed(idx))
+
+
+class Simulator:
+    def __init__(self, program: AcceleratorProgram, chip: ChipSpec,
+                 mxv_fn=None, check_raw: bool = True):
+        self.prog = program
+        self.chip = chip
+        self.mxv = mxv_fn if mxv_fn is not None else (lambda m, v: m @ v)
+        self.check_raw = check_raw
+
+    # ------------------------------------------------------------------- run
+    def run(self, images: List[np.ndarray], schedule: str = "pipelined",
+            max_cycles: int = 1_000_000) -> Tuple[List[Dict[str, np.ndarray]], SimStats]:
+        assert schedule in ("pipelined", "sequential")
+        prog, chip = self.prog, self.chip
+        n_images = len(images)
+        stats = SimStats()
+        inflight: List[Message] = []
+        states: Dict[Tuple[int, int], _CoreImageState] = {}
+        outputs: List[Dict[str, np.ndarray]] = [
+            {v: np.zeros(s, np.float32) for v, s in prog.gcu.outputs.items()}
+            for _ in range(n_images)]
+        out_counts = [defaultdict(int) for _ in range(n_images)]
+        out_expected = {v: self._expected_chunks(v) for v in prog.gcu.outputs}
+        img_complete = [False] * n_images
+        core_done = defaultdict(bool)        # (core, image) -> finished
+        part_core = prog.mapping
+
+        # GCU stream cursor
+        gcu_img = 0
+        gcu_pix = 0
+        c_in, ih, iw = prog.gcu.input_shape
+        gcu_total = ih * iw
+
+        def state(core: int, img: int) -> _CoreImageState:
+            key = (core, img)
+            if key not in states:
+                states[key] = _CoreImageState(prog.cores[core])
+            return states[key]
+
+        for cycle in range(max_cycles):
+            progress = False
+
+            # 1. deliver messages
+            arriving = [m for m in inflight if m.arrive == cycle]
+            inflight = [m for m in inflight if m.arrive > cycle]
+            for m in arriving:
+                progress = True
+                if m.dst_core == -1:
+                    self._gmem_write(outputs[m.image], out_counts[m.image], m)
+                else:
+                    st = state(m.dst_core, m.image)
+                    self._sram_write(prog.cores[m.dst_core], st, m)
+            for im in range(n_images):
+                if not img_complete[im] and all(
+                        out_counts[im][v] >= out_expected[v]
+                        for v in prog.gcu.outputs):
+                    img_complete[im] = True
+
+            # 2. GCU streaming (arrivals next cycle)
+            if gcu_img < n_images:
+                stream_ok = (schedule == "pipelined" or gcu_img == 0
+                             or img_complete[gcu_img - 1])
+                if stream_ok:
+                    for _ in range(chip.dma_pixels_per_cycle):
+                        if gcu_pix >= gcu_total:
+                            break
+                        pi, pj = gcu_pix // iw, gcu_pix % iw
+                        for dst in prog.gcu.dst_cores:
+                            inflight.append(Message(
+                                cycle + 1, dst, gcu_img, prog.gcu.input_value,
+                                "pixel", (0, pi, pj),
+                                images[gcu_img][:, pi, pj].astype(np.float32)))
+                            stats.messages += 1
+                        gcu_pix += 1
+                        progress = True
+                    if gcu_pix >= gcu_total:
+                        gcu_img += 1
+                        gcu_pix = 0
+
+            # 3. core execution (based on start-of-cycle state)
+            for core_id, cfg in prog.cores.items():
+                img = self._core_current_image(core_id, n_images, core_done)
+                if img is None:
+                    continue
+                st = state(core_id, img)
+                if st.done:
+                    continue
+                it = _unflatten(st.counter, cfg.iter_bounds)
+                if not all(fr.safe(it) for fr in st.frontiers.values()):
+                    continue
+                if schedule == "sequential" and not self._producers_done(
+                        cfg, img, core_done, part_core, gcu_img, gcu_pix):
+                    continue
+                msgs = self._execute_iteration(cfg, st, it, img, cycle)
+                inflight.extend(msgs)
+                stats.messages += len(msgs)
+                stats.bytes_sent += sum(m.payload.nbytes for m in msgs)
+                stats.busy[core_id] += 1
+                stats.first_busy.setdefault(core_id, cycle)
+                stats.last_busy[core_id] = cycle
+                st.counter += 1
+                if st.counter >= int(np.prod(cfg.iter_bounds)):
+                    st.done = True
+                    core_done[(core_id, img)] = True
+                progress = True
+
+            # SRAM high-water: live buffers per core
+            live = defaultdict(int)
+            for (core, img), st in states.items():
+                if not st.done:
+                    live[core] += sum(b.nbytes for b in st.sram.values())
+                    live[core] += sum(b.nbytes for b in st.pool_acc.values())
+            for core, b in live.items():
+                stats.sram_high_water[core] = max(stats.sram_high_water[core], b)
+
+            if all(img_complete):
+                stats.cycles = cycle + 1
+                return outputs, stats
+            if not progress and not inflight:
+                raise DeadlockError(
+                    f"no progress at cycle {cycle}; "
+                    f"complete={img_complete}, "
+                    f"cores={{c: s.counter for (c, _), s in states.items()}}")
+        raise DeadlockError(f"max_cycles={max_cycles} exceeded")
+
+    # ------------------------------------------------------------- internals
+    def _core_current_image(self, core: int, n_images: int,
+                            core_done) -> Optional[int]:
+        for im in range(n_images):
+            if not core_done[(core, im)]:
+                return im
+        return None
+
+    def _producers_done(self, cfg: CoreConfig, img: int, core_done,
+                        part_core, gcu_img: int, gcu_pix: int) -> bool:
+        for lc in cfg.lcu.values():
+            src = lc.src_partition
+            if src == -1:
+                if gcu_img <= img:  # GCU done with image iff it moved past it
+                    return False
+            elif not core_done[(part_core[src], img)]:
+                return False
+        return True
+
+    def _expected_chunks(self, value: str) -> int:
+        shape = self.prog.gcu.outputs[value]
+        core = next(c for c in self.prog.cores.values()
+                    for s in c.sends if s.value == value and s.to_gmem)
+        spec = next(s for s in core.sends if s.value == value)
+        if spec.write.kind in ("full", "reduce"):
+            return 1
+        if spec.write.kind == "pixel":
+            return shape[1] * shape[2]
+        if spec.write.kind == "pool":
+            return shape[1] * shape[2]
+        raise NotImplementedError(spec.write.kind)
+
+    def _gmem_write(self, out: Dict[str, np.ndarray], counts, m: Message):
+        arr = out[m.value]
+        if m.kind in ("full", "reduce"):
+            arr[:] = m.payload.reshape(arr.shape)
+        else:
+            _, i, j = m.loc
+            arr[:, i, j] = m.payload
+        counts[m.value] += 1
+
+    def _sram_write(self, cfg: CoreConfig, st: _CoreImageState, m: Message):
+        lc = cfg.lcu[m.value]
+        buf = st.sram[m.value]
+        if m.kind in ("full", "reduce"):
+            buf[...] = m.payload.reshape(buf.shape)
+        else:
+            _, i, j = m.loc
+            buf[:, i + lc.pad, j + lc.pad] = m.payload
+        st.frontiers[m.value].observe(m.loc)
+        if self.check_raw:
+            if m.kind in ("full", "reduce"):
+                st.written[m.value].add(())
+            else:
+                st.written[m.value].add((m.loc[1], m.loc[2]))
+
+    def _raw_check(self, cfg: CoreConfig, st: _CoreImageState, it: Point):
+        """Independent oracle: every location read must already be written."""
+        for v, lc in cfg.lcu.items():
+            shp = lc.shape
+            if len(shp) != 3:
+                if () not in st.written[v]:
+                    raise RawViolation(f"{cfg.core_id}: read {v} before write")
+                continue
+            needed = self._read_set(cfg, v, it, shp)
+            missing = needed - st.written[v]
+            if missing:
+                raise RawViolation(
+                    f"core {cfg.core_id} iter {it}: reads {v} at unwritten "
+                    f"locations {sorted(missing)[:4]}...")
+
+    def _read_set(self, cfg: CoreConfig, v: str, it: Point, shp) -> set:
+        _, H, W = shp
+        need = set()
+        if cfg.xbar_node is not None and cfg.xbar_node.op == "conv2d" \
+                and cfg.xbar_input == v:
+            s, p = cfg.conv_attrs["stride"], cfg.conv_attrs["pad"]
+            fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
+            oh, ow = it
+            for i in range(oh * s - p, oh * s - p + fh):
+                for j in range(ow * s - p, ow * s - p + fw):
+                    if 0 <= i < H and 0 <= j < W:
+                        need.add((i, j))
+        if cfg.xbar_node is not None and cfg.xbar_node.op == "gemm" \
+                and cfg.xbar_input == v:
+            need |= {(i, j) for i in range(H) for j in range(W)}
+        for n in cfg.dpu_nodes:
+            if v in n.inputs and n.op in ("relu", "add"):
+                need.add((it[0], it[1]))
+            elif v in n.inputs and n.op in ("maxpool2d", "avgpool2d"):
+                k, s = n.attrs["k"], n.attrs["stride"]
+                oh, ow = it
+                need |= {(i, j) for i in range(oh * s, oh * s + k)
+                         for j in range(ow * s, ow * s + k)
+                         if 0 <= i < H and 0 <= j < W}
+            elif v in n.inputs and n.op == "global_avgpool":
+                need |= {(i, j) for i in range(H) for j in range(W)}
+        return need
+
+    def _execute_iteration(self, cfg: CoreConfig, st: _CoreImageState,
+                           it: Point, img: int, cycle: int) -> List[Message]:
+        if self.check_raw and cfg.lcu:
+            self._raw_check(cfg, st, it)
+        env: Dict[str, np.ndarray] = {}
+        env_coords: Dict[str, Point] = {}
+        pooled_ready: Dict[str, Tuple[Point, np.ndarray]] = {}
+        reduce_ready: Dict[str, np.ndarray] = {}
+
+        def pix(value: str) -> np.ndarray:
+            if value in env:
+                return env[value]
+            lc = cfg.lcu[value]
+            buf = st.sram[value]
+            if len(lc.shape) != 3:
+                return buf
+            return buf[:, it[0] + lc.pad, it[1] + lc.pad]
+
+        # 1. crossbar
+        if cfg.xbar_node is not None:
+            if cfg.xbar_node.op == "conv2d":
+                lc = cfg.lcu[cfg.xbar_input]
+                buf = st.sram[cfg.xbar_input]
+                s = cfg.conv_attrs["stride"]
+                fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
+                oh, ow = it
+                win = buf[:, oh * s:oh * s + fh, ow * s:ow * s + fw]
+                y = self.mxv(cfg.xbar_matrix, win.reshape(-1))
+            else:  # gemm
+                vbuf = st.sram[cfg.xbar_input]
+                y = self.mxv(cfg.xbar_matrix, vbuf.reshape(-1))
+            if cfg.xbar_bias is not None:
+                y = y + cfg.xbar_bias
+            env[cfg.xbar_node.outputs[0]] = y.astype(np.float32)
+            env_coords[cfg.xbar_node.outputs[0]] = it
+
+        # 2. DPU instruction sequence
+        for n in cfg.dpu_nodes:
+            if n.op == "relu":
+                env[n.outputs[0]] = np.maximum(pix(n.inputs[0]), 0.0)
+            elif n.op == "add":
+                env[n.outputs[0]] = pix(n.inputs[0]) + pix(n.inputs[1])
+            elif n.op in ("maxpool2d", "avgpool2d"):
+                out = n.outputs[0]
+                k, s = n.attrs["k"], n.attrs["stride"]
+                shp = self.prog.pgraph.graph.values[out].shape
+                if out not in st.pool_acc:
+                    init = -np.inf if n.op == "maxpool2d" else 0.0
+                    st.pool_acc[out] = np.full(shp, init, np.float32)
+                acc = st.pool_acc[out]
+                x = pix(n.inputs[0])
+                oh, ow = it
+                # this pixel contributes to windows (ph, pw)
+                for ph in range(max(0, (oh - k + s) // s if s else 0), shp[1]):
+                    if not (ph * s <= oh < ph * s + k):
+                        continue
+                    for pw in range(shp[2]):
+                        if not (pw * s <= ow < pw * s + k):
+                            continue
+                        if n.op == "maxpool2d":
+                            acc[:, ph, pw] = np.maximum(acc[:, ph, pw], x)
+                        else:
+                            acc[:, ph, pw] += x / (k * k)
+                        if oh == ph * s + k - 1 and ow == pw * s + k - 1:
+                            pooled_ready[out] = ((ph, pw), acc[:, ph, pw].copy())
+            elif n.op == "global_avgpool":
+                out = n.outputs[0]
+                src_shape = self.prog.pgraph.graph.values[n.inputs[0]].shape
+                if out not in st.reduce_acc:
+                    st.reduce_acc[out] = np.zeros(src_shape[0], np.float32)
+                st.reduce_acc[out] += pix(n.inputs[0])
+                if it == (src_shape[1] - 1, src_shape[2] - 1):
+                    reduce_ready[out] = st.reduce_acc[out] / (
+                        src_shape[1] * src_shape[2])
+                    env[out] = reduce_ready[out]
+            else:
+                raise NotImplementedError(f"DPU op {n.op}")
+
+        # 3. sends (arrive at cycle + 1, paper §2)
+        msgs: List[Message] = []
+
+        def emit(spec: SendSpec, kind: str, loc: Point, payload: np.ndarray):
+            for dst in spec.dst_cores:
+                msgs.append(Message(cycle + 1, dst, img, spec.value, kind,
+                                    loc, payload.copy()))
+            if spec.to_gmem:
+                msgs.append(Message(cycle + 1, -1, img, spec.value, kind,
+                                    loc, payload.copy()))
+
+        for spec in cfg.sends:
+            if spec.write.kind == "pixel" and spec.value in env:
+                emit(spec, "pixel", (0, it[0], it[1]), env[spec.value])
+            elif spec.write.kind == "pool" and spec.value in pooled_ready:
+                (ph, pw), vec = pooled_ready[spec.value]
+                emit(spec, "pool", (0, ph, pw), vec)
+            elif spec.write.kind == "full" and spec.value in env:
+                emit(spec, "full", (0,), env[spec.value])
+            elif spec.write.kind == "reduce" and spec.value in reduce_ready:
+                emit(spec, "reduce", (0,), reduce_ready[spec.value])
+        return msgs

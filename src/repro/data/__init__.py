@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, PrefetchLoader
+
+__all__ = ["SyntheticLMData", "PrefetchLoader"]

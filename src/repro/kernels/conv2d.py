@@ -1,0 +1,68 @@
+"""Fused conv-as-MxV Pallas kernel (paper Listing 1, one CM core).
+
+The whole (padded) input image sits in VMEM — faithful to the CM core whose
+local SRAM holds the consumer array — and the crossbar matrix (FL, C*FH*FW)
+is resident.  The grid walks output rows; each step builds the im2col patch
+matrix for one row and performs a single MXU matmul, i.e. OW crossbar MxV
+operations batched row-wise.
+
+Output layout: (OH, OW, FL) so the minor dims stay MXU-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_row_kernel(x_ref, w_ref, scale_ref, o_ref, *, stride: int,
+                     fh: int, fw: int, ow: int):
+    oh = pl.program_id(0)
+    c = x_ref.shape[0]
+    # Load the FH input rows this output row needs.
+    slab = x_ref[:, pl.dslice(oh * stride, fh), :]           # (C, FH, Wp)
+    # im2col for one output row: (OW, C*FH*FW), unrolled over the window.
+    cols = []
+    for j in range(ow):
+        patch = slab[:, :, j * stride:j * stride + fw]        # (C, FH, FW)
+        cols.append(patch.reshape(1, c * fh * fw))
+    patches = jnp.concatenate(cols, axis=0)                   # (OW, K)
+    y = jax.lax.dot_general(patches, w_ref[...].astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = (y * scale_ref[...]).astype(o_ref.dtype)       # (OW, FL)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "fh", "fw",
+                                             "interpret"))
+def crossbar_conv2d(x: jax.Array, wq: jax.Array, scale: jax.Array,
+                    stride: int = 1, pad: int = 0, fh: int = 3, fw: int = 3,
+                    interpret: bool = True) -> jax.Array:
+    """x (C, H, W) f32; wq (FL, C*FH*FW) int8/f32; scale (FL,).
+
+    Returns (FL, OH, OW) to match the graph IR layout.
+    """
+    c, h, w = x.shape
+    fl, k = wq.shape
+    assert k == c * fh * fw
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    hp, wp = h + 2 * pad, w + 2 * pad
+    oh = (hp - fh) // stride + 1
+    ow = (wp - fw) // stride + 1
+    out = pl.pallas_call(
+        functools.partial(_conv_row_kernel, stride=stride, fh=fh, fw=fw,
+                          ow=ow),
+        grid=(oh,),
+        in_specs=[
+            pl.BlockSpec((c, hp, wp), lambda i: (0, 0, 0)),   # whole image
+            pl.BlockSpec((fl, k), lambda i: (0, 0)),          # crossbar
+            pl.BlockSpec((1, fl), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ow, fl), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, fl), jnp.float32),
+        interpret=interpret,
+    )(xp, wq, scale.reshape(1, fl))
+    return jnp.transpose(out, (2, 0, 1))

@@ -1,0 +1,99 @@
+"""Flash-decode over an **int8 KV cache** (Pallas, §Perf pair B on-TPU).
+
+Same online-softmax structure as :mod:`decode_attn`, but the K/V blocks
+stream from HBM as int8 with per-(position, head) f32 scales and are
+dequantized *inside* the kernel after the VMEM copy — HBM traffic for the
+cache (the decode bottleneck, EXPERIMENTS.md §Perf pair B) is halved while
+the MXU math still runs at full precision.
+
+This is also the closest TPU analogue of the paper's crossbar economics:
+the computational memory stores *quantized* values (PCM conductances) and
+the periphery dequantizes on read.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_int8_kernel(len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *,
+                        sm_scale: float, bk: int, n_kv_blocks: int):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                       # (G, D)
+    # dequantize in-register: int8 block * per-row scale
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]        # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]        # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    ik = kv * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ik < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode_int8(q: jax.Array, k8: jax.Array, k_scale: jax.Array,
+                      v8: jax.Array, v_scale: jax.Array, length,
+                      bk: int = 128, interpret: bool = True) -> jax.Array:
+    """q (B, Hq, D) f32/bf16; k8/v8 (B, Hkv, S, D) int8;
+    k_scale/v_scale (B, Hkv, S, 1) f32; length () int32 -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k8.shape
+    assert k8.dtype == jnp.int8 and v8.dtype == jnp.int8
+    assert hq % hkv == 0
+    g = hq // hkv
+    bk = min(bk, s)
+    assert s % bk == 0
+    grid = (b, hkv, s // bk)
+    qg = q.reshape(b, hkv, g, d)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_decode_int8_kernel,
+                          sm_scale=1.0 / (d ** 0.5), bk=bk,
+                          n_kv_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, 1), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, 1), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qg, k8, k_scale, v8, v_scale)
+    return out.reshape(b, hq, d)

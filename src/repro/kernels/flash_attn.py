@@ -1,0 +1,93 @@
+"""Flash-attention forward Pallas kernel (prefill path).
+
+Online-softmax blockwise attention: grid (B, Hq, Sq/BQ, Sk/BK) with the KV
+axis minor-most so the (m, l, acc) VMEM scratch carries across KV blocks.
+GQA: query head h reads KV head h // (Hq // Hkv) via the BlockSpec index map.
+Causal masking by absolute block offsets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, sm_scale: float, bq: int, bk: int,
+                  n_kv_blocks: int, q_offset: int):
+    kv = pl.program_id(3)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)                      # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if causal:
+        # Queries are the last Sq positions of the Sk-long stream: query i
+        # sits at absolute position i + (Sk - Sq) = i + q_offset.
+        iq = q_offset + pl.program_id(2) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        ik = kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(iq >= ik, s, NEG_INF)
+
+    m_prev = m_ref[...]                                      # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q (B, Hq, Sq, D); k/v (B, Hkv, Sk, D); returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq, bk = min(bq, sq), min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    grid = (b, hq, sq // bq, sk // bk)
+    sm_scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, sm_scale=sm_scale,
+                          bq=bq, bk=bk, n_kv_blocks=grid[3],
+                          q_offset=sk - sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""Selective-scan (Mamba-1) Pallas kernel.
+
+Recurrence (diagonal A, per-channel state of size N):
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) * B_t
+    y_t = (h_t * C_t).sum(N) + D * u_t
+
+Grid (B, D/BD, L/BL) with the time-chunk axis minor-most: the (BD, N) state
+carry lives in VMEM scratch and persists across chunks (TPU grids execute
+sequentially).  Inside a chunk the recurrence is a fori_loop — sequential in
+time like the hardware, parallel across the BD channel tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_ref, *,
+                 bl: int):
+    chunk = pl.program_id(2)
+
+    @pl.when(chunk == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                        # (BD, N)
+
+    def step(t, h):
+        dt = dt_ref[0, t].astype(jnp.float32)                 # (BD,)
+        u = u_ref[0, t].astype(jnp.float32)                   # (BD,)
+        bt = b_ref[0, t].astype(jnp.float32)                  # (N,)
+        ct = c_ref[0, t].astype(jnp.float32)                  # (N,)
+        da = jnp.exp(dt[:, None] * a)                         # (BD, N)
+        h = h * da + (dt * u)[:, None] * bt[None, :]
+        y = jnp.sum(h * ct[None, :], axis=1)                  # (BD,)
+        o_ref[0, t] = y.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bl, step, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bl", "interpret"))
+def selective_scan(u: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array, d_skip: jax.Array, bd: int = 256,
+                   bl: int = 64, interpret: bool = True) -> jax.Array:
+    """u/dt (B, L, D); a (D, N); b/c (B, L, N); d_skip (D,) -> y (B, L, D)."""
+    bsz, l, d = u.shape
+    dmodel, n = a.shape
+    assert dmodel == d
+    bd, bl = min(bd, d), min(bl, l)
+    assert d % bd == 0 and l % bl == 0
+    grid = (bsz, d // bd, l // bl)
+    y = pl.pallas_call(
+        functools.partial(_scan_kernel, bl=bl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bl, bd), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, bl, bd), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((bd, n), lambda i, j, t: (j, 0)),
+            pl.BlockSpec((1, bl, n), lambda i, j, t: (i, t, 0)),
+            pl.BlockSpec((1, bl, n), lambda i, j, t: (i, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bl, bd), lambda i, j, t: (i, t, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, l, d), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, a, b, c)
+    return y + d_skip[None, None, :] * u

@@ -1,0 +1,111 @@
+"""Crossbar MxV Pallas kernel — the CM core's analog matrix-vector unit.
+
+TPU adaptation of the paper's crossbar (§2): the weight matrix lives
+*resident* in VMEM as int8 "conductances" with per-row scales (analog
+programming modeled as symmetric per-row quantization, cf. paper §3.5 /
+[41]).  Activations stream through; the MXU performs the per-block dot.
+
+Layout: x (B, N) @ W (M, N)^T -> y (B, M), y = (x @ q^T) * scale[None, :].
+Block tiling is MXU-aligned: (BB, BN) x (BM, BN) -> (BB, BM) accumulated in
+an f32 VMEM scratch across the N-block grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mxv_kernel(x_ref, wq_ref, scale_ref, o_ref, acc_ref, *, n_blocks: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = wq_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_blocks - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * scale_ref[...]).astype(o_ref.dtype)
+
+
+def _mxv_int8_kernel(xq_ref, xs_ref, wq_ref, ws_ref, o_ref, acc_ref, *,
+                     n_blocks: int):
+    """Fully-quantized path: int8 activations (DAC) x int8 weights."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...], wq_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_blocks - 1)
+    def _finish():
+        deq = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "bm", "bn", "interpret"))
+def crossbar_mxv(x: jax.Array, wq: jax.Array, scale: jax.Array,
+                 bb: int = 8, bm: int = 128, bn: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """y = (x @ wq^T) * scale.  x (B, N) f32/bf16, wq (M, N) int8, scale (M,)."""
+    b, n = x.shape
+    m, n2 = wq.shape
+    assert n == n2 and scale.shape == (m,)
+    bb, bm, bn = min(bb, b), min(bm, m), min(bn, n)
+    assert b % bb == 0 and m % bm == 0 and n % bn == 0, (b, m, n, bb, bm, bn)
+    grid = (b // bb, m // bm, n // bn)
+    scale2d = scale.reshape(1, m)
+    return pl.pallas_call(
+        functools.partial(_mxv_kernel, n_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bm), jnp.float32)],
+        interpret=interpret,
+    )(x, wq, scale2d)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "bm", "bn", "interpret"))
+def crossbar_mxv_int8(xq: jax.Array, xs: jax.Array, wq: jax.Array,
+                      ws: jax.Array, bb: int = 8, bm: int = 128,
+                      bn: int = 128, interpret: bool = True) -> jax.Array:
+    """Fully-int8 path.  xq (B, N) int8, xs (B,), wq (M, N) int8, ws (M,)."""
+    b, n = xq.shape
+    m, _ = wq.shape
+    bb, bm, bn = min(bb, b), min(bm, m), min(bn, n)
+    assert b % bb == 0 and m % bm == 0 and n % bn == 0
+    grid = (b // bb, m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_mxv_int8_kernel, n_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, bm), jnp.int32)],
+        interpret=interpret,
+    )(xq, xs.reshape(b, 1), wq, ws.reshape(1, m))

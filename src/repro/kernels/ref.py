@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------ crossbar
+def quantize_crossbar(w, bits: int = 8):
+    """Symmetric per-row quantization: the 'analog programming' model."""
+    w = jnp.asarray(w, jnp.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-12)
+    scale = absmax / qmax
+    wq = jnp.clip(jnp.round(w / scale[:, None]), -qmax, qmax).astype(jnp.int8)
+    return wq, scale.astype(jnp.float32)
+
+
+def quantize_vec(x, bits: int = 8):
+    """Per-row symmetric activation quantization (the DAC model)."""
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-12)
+    scale = absmax / qmax
+    xq = jnp.clip(jnp.round(x / scale[..., None]), -qmax, qmax).astype(jnp.int8)
+    return xq, scale.astype(jnp.float32)
+
+
+def crossbar_mxv_ref(x, wq, scale):
+    return (jnp.asarray(x, jnp.float32) @ wq.astype(jnp.float32).T
+            ) * scale[None, :]
+
+
+def crossbar_mxv_int8_ref(xq, xs, wq, ws):
+    acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32).T
+    return acc.astype(jnp.float32) * xs[:, None] * ws[None, :]
+
+
+def crossbar_conv2d_ref(x, wq, scale, stride=1, pad=0, fh=3, fw=3):
+    """Paper Listing 1, in jnp: conv as per-pixel MxV."""
+    c, h, w = x.shape
+    fl, k = wq.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    hp, wp = h + 2 * pad, w + 2 * pad
+    oh = (hp - fh) // stride + 1
+    ow = (wp - fw) // stride + 1
+    m = wq.astype(jnp.float32) * scale[:, None]
+    patches = []
+    for i in range(oh):
+        for j in range(ow):
+            patches.append(
+                xp[:, i * stride:i * stride + fh,
+                   j * stride:j * stride + fw].reshape(-1))
+    pat = jnp.stack(patches)                       # (OH*OW, K)
+    y = pat @ m.T                                  # (OH*OW, FL)
+    return jnp.transpose(y.reshape(oh, ow, fl), (2, 0, 1))
+
+
+# ----------------------------------------------------------------- attention
+def attention_ref(q, k, v, causal=True):
+    """q (B,Hq,Sq,D); k/v (B,Hkv,Sk,D) — full-softmax GQA oracle."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q, k, v, length):
+    """q (B,Hq,D); k/v (B,Hkv,S,D) — decode oracle with cache-length mask."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    sc = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                    kr.astype(jnp.float32)) / (d ** 0.5)
+    mask = jnp.arange(s)[None, None, :] < length
+    sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+# -------------------------------------------------------------- mamba-1 scan
+def selective_scan_ref(u, dt, a, b, c, d_skip):
+    """lax.scan oracle for the selective scan."""
+    bsz, l, d = u.shape
+    _, n = a.shape
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        da = jnp.exp(dt_t[:, :, None] * a[None])              # (B, D, N)
+        h = h * da + (dt_t * u_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=2)              # (B, D)
+        return h, y
+
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                # (B, L, D)
+    return (y + d_skip[None, None, :] * u).astype(u.dtype)
+
+
+def decode_int8_ref(q, k8, k_scale, v8, v_scale, length):
+    """Oracle for flash_decode_int8: dequantize then exact decode attention.
+
+    q (B, Hq, D); k8/v8 (B, Hkv, S, D) int8; scales (B, Hkv, S, 1) f32.
+    """
+    k = k8.astype(jnp.float32) * k_scale
+    v = v8.astype(jnp.float32) * v_scale
+    return decode_ref(q, k, v, length)

@@ -1,0 +1,136 @@
+"""Inject generated roofline tables into EXPERIMENTS.md placeholders.
+
+Reads experiments/dryrun/*_scaled.json and replaces:
+  TABLE-PLACEHOLDER-ROOFLINE  -> per-cell three-term roofline table
+  TABLE-PLACEHOLDER-LEVERS    -> per-cell dominant bottleneck + lever
+
+Run: PYTHONPATH=src python -m repro.launch.finalize_experiments
+Idempotent: placeholders are kept as HTML comments so re-runs refresh the
+tables in place.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+
+from repro.launch.report import ARCH_ORDER, SHAPE_ORDER, fmt_s, load
+
+LEVERS = {
+    ("collective", "train"):
+        "attn_shard=seq kills the score-AR (see §Perf A/bonus); then bf16 "
+        "grad-AR + reduce-scatter into ZeRO shards",
+    ("collective", "prefill"):
+        "attn_shard=seq + causal_bound (§Perf A/C): context-parallel "
+        "queries, replicated GQA k/v",
+    ("collective", "decode"):
+        "bf16 reduction path (CPU prints f32 => halves on TPU); for MoE "
+        "additionally pad experts for clean EP all-to-all dispatch",
+    ("memory", "decode"):
+        "kv_dtype=int8 (§Perf B) halves cache reads; flash-decode kernel "
+        "keeps the read int8-resident",
+    ("memory", "train"):
+        "remat policy 'dots' + fused flash kernels (analytic model); HLO "
+        "ub is CPU-unfused",
+    ("memory", "prefill"):
+        "Pallas flash prefill kernel (no S^2 traffic); bf16 scores",
+    ("compute", "train"):
+        "already compute-bound: raise useful-flops ratio (remat policy, "
+        "fused CE)",
+    ("compute", "prefill"):
+        "causal_bound trims ~45% attention flops; rest is useful work",
+    ("compute", "decode"):
+        "compute-bound decode is the good case; batch growth amortizes "
+        "weights",
+}
+
+
+def roofline_table(recs) -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_mem(HLO ub) | "
+            "t_collective | bound | MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['t_compute_s'])} | "
+            f"{fmt_s(rf['t_memory_s'])} | "
+            f"{fmt_s(rf.get('t_memory_hlo_ub_s', rf['t_memory_s']))} | "
+            f"{fmt_s(rf['t_collective_s'])} | {rf['dominant']} | "
+            f"{rf['useful_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.1%} |")
+    return "\n".join(rows)
+
+
+def _family(arch: str) -> str:
+    from repro.configs.base import get_arch
+    return get_arch(arch).family
+
+
+def _lever(r) -> str:
+    rf = r["roofline"]
+    dom, kind, fam = rf["dominant"], _kind(r["shape"]), _family(r["arch"])
+    if fam == "ssm" or (fam == "hybrid" and dom == "collective"):
+        if dom == "collective":
+            return ("mamba in/out projections: same token-sharded layout "
+                    "as attn_shard=seq (din divides the model axis); bf16 "
+                    "reductions")
+        if dom == "memory":
+            return ("SSM state read is near its floor; remaining lever is "
+                    "f32->bf16 state (2x) at recurrence-precision cost")
+    if fam == "moe" and dom == "collective":
+        if kind == "prefill":
+            return ("seq-grouped dispatch + replicated/EP expert weights "
+                    "(§Perf MoE bonus: 126x measured)")
+        if kind == "train":
+            return ("seq-grouped dispatch (§Perf MoE bonus) + bf16 "
+                    "grad-AR, reduce-scatter into ZeRO shards")
+    return LEVERS.get((dom, kind), "—")
+
+
+def levers_table(recs) -> str:
+    rows = ["| arch | shape | bound | what moves it down |",
+            "|---|---|---|---|"]
+    for r in recs:
+        rf = r["roofline"]
+        rows.append(f"| {r['arch']} | {r['shape']} | {rf['dominant']} | "
+                    f"{_lever(r)} |")
+    return "\n".join(rows)
+
+
+def _kind(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def inject(md: str, marker: str, table: str) -> str:
+    begin = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{begin}\n{table}\n{end}"
+    if begin in md:
+        return re.sub(re.escape(begin) + r".*?" + re.escape(end), block,
+                      md, flags=re.S)
+    return md.replace(f"**{marker}**", block)
+
+
+def main() -> None:
+    recs = [r for r in load("experiments/dryrun", "scaled")
+            if r.get("ok") and not r["multi_pod"]]
+    n_expected = 32
+    with open("EXPERIMENTS.md") as f:
+        md = f.read()
+    md = inject(md, "TABLE-PLACEHOLDER-ROOFLINE", roofline_table(recs))
+    md = inject(md, "TABLE-PLACEHOLDER-LEVERS", levers_table(recs))
+    note = (f"\n*{len(recs)}/{n_expected} scaled cells present at "
+            f"generation time.*\n")
+    if f"{len(recs)}/{n_expected} scaled cells" not in md:
+        md = re.sub(r"\n\*\d+/\d+ scaled cells present at generation "
+                    r"time\.\*\n", "\n", md)
+        md = md.replace("<!-- /TABLE-PLACEHOLDER-ROOFLINE -->",
+                        "<!-- /TABLE-PLACEHOLDER-ROOFLINE -->" + note)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(md)
+    print(f"injected {len(recs)} cells into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Model zoo: a uniform API over decoder-only / hybrid / enc-dec archs.
+
+``build_model(cfg)`` returns a :class:`Model` with
+  init(key) -> params
+  loss(params, batch) -> (scalar, metrics)          # training objective
+  prefill(params, batch, max_len) -> (logits, cache)
+  decode_step(params, cache, tokens) -> (logits, cache)
+  init_cache(batch, max_len[, enc_len]) -> cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+from repro.configs.base import ArchConfig
+from . import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(cfg, key),
+            loss=lambda p, b: encdec.encdec_loss(cfg, p, b),
+            prefill=lambda p, b, max_len: encdec.encdec_prefill(
+                cfg, p, b["embeds"], b["tokens"], max_len),
+            decode_step=lambda p, c, t: encdec.encdec_decode_step(
+                cfg, p, c, t),
+            init_cache=lambda batch, max_len, enc_len=0: (
+                encdec.init_encdec_cache(cfg, batch, max_len, enc_len)),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init_lm(cfg, key),
+        loss=lambda p, b: lm.lm_loss(cfg, p, b),
+        prefill=lambda p, b, max_len: lm.prefill(
+            cfg, p, b.get("embeds", b.get("tokens")), max_len),
+        decode_step=lambda p, c, t: lm.decode_step(cfg, p, c, t),
+        init_cache=lambda batch, max_len, enc_len=0: (
+            lm.init_cache(cfg, batch, max_len)),
+    )
+
+
+__all__ = ["Model", "build_model", "lm", "encdec"]

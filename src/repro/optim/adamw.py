@@ -1,0 +1,68 @@
+"""AdamW with configurable moment dtype (fp32 default, bf16 for the
+>=100B archs) and decoupled weight decay, plus a cosine LR schedule.
+
+Implemented as pure pytree transforms so GSPMD shards the update with the
+moment PartitionSpecs (ZeRO-1: see repro.sharding.opt_specs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params: Any, dtype: str = "float32") -> OptState:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads: Any, opt: OptState, params: Any, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> tuple[Any, OptState, Dict]:
+    count = opt.count + 1
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g32 * g32 * (1 - b2)
+        mhat = m32 / (1 - b1 ** count.astype(jnp.float32))
+        vhat = v32 / (1 - b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        wd = weight_decay if p.ndim >= 2 else 0.0        # no decay on norms
+        newp = p.astype(jnp.float32) - lr * (step + wd * p.astype(jnp.float32))
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, opt.mu, opt.nu, params)
+    newp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda t: t[2], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newp, OptState(newm, newv, count), {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    warm = peak_lr * (step + 1) / warmup
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,3 @@
+from .engine import ServeEngine
+
+__all__ = ["ServeEngine"]

@@ -1,0 +1,91 @@
+"""Batched serving engine: prefill + jit'd decode loop over a fixed batch.
+
+Mirrors the CM accelerator's economics (paper §1): configure once (params
+resident), then *stream* requests through — prefill fills the KV/SSM caches,
+decode_step advances every live sequence one token per call.  Per-sequence
+lengths allow ragged batches; finished sequences are masked out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ArchConfig
+    max_len: int
+    params: Any = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self.model = build_model(self.cfg)
+        if self.params is None:
+            self.params = self.model.init(jax.random.key(self.seed))
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.max_len),
+            static_argnames=())
+
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 embeds: Optional[np.ndarray] = None,
+                 eos: Optional[int] = None) -> np.ndarray:
+        """prompts (B, S_p) int32 -> generated ids (B, n_tokens)."""
+        batch: Dict[str, Any] = {}
+        if self.cfg.embed_inputs:
+            batch["embeds"] = jnp.asarray(embeds)
+            if self.cfg.is_encdec:
+                batch["tokens"] = jnp.asarray(prompts)
+        else:
+            batch["tokens"] = jnp.asarray(prompts)
+        logits, cache = self._prefill(self.params, batch)
+        b = logits.shape[0]
+        out = np.zeros((b, n_tokens), np.int32)
+        done = np.zeros((b,), bool)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for t in range(n_tokens):
+            out[:, t] = np.where(done, eos if eos is not None else 0,
+                                 np.asarray(tok))
+            if eos is not None:
+                done |= np.asarray(tok) == eos
+                if done.all():
+                    break
+            if self.cfg.embed_inputs and not self.cfg.is_encdec:
+                # VLM decode beyond prefill uses the token embedding table
+                step_in = self.params["embed"][tok]
+            else:
+                step_in = tok
+            logits, cache = self._decode(self.params, cache, step_in)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out
+
+    def throughput_probe(self, batch: int, prompt_len: int,
+                         n_tokens: int = 8) -> Dict[str, float]:
+        """Tokens/sec measurement harness used by the benchmarks."""
+        import time
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, self.cfg.vocab_size,
+                               (batch, prompt_len)).astype(np.int32)
+        embeds = None
+        if self.cfg.embed_inputs:
+            embeds = rng.standard_normal(
+                (batch, prompt_len, self.cfg.d_model)).astype(np.float32)
+        self.generate(prompts, 2, embeds=embeds)         # compile warmup
+        t0 = time.monotonic()
+        self.generate(prompts, 1, embeds=embeds)
+        prefill_s = time.monotonic() - t0
+        t0 = time.monotonic()
+        self.generate(prompts, n_tokens, embeds=embeds)
+        total_s = time.monotonic() - t0
+        decode_s = max(total_s - prefill_s, 1e-9)
+        return {"prefill_s": prefill_s,
+                "decode_tok_per_s": batch * (n_tokens - 1) / decode_s}

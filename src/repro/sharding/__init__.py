@@ -1,0 +1,5 @@
+from .rules import (batch_axes, batch_specs, cache_specs, named, opt_specs,
+                    param_specs)
+
+__all__ = ["batch_axes", "batch_specs", "cache_specs", "named", "opt_specs",
+           "param_specs"]

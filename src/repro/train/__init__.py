@@ -1,0 +1,3 @@
+from .loop import TrainState, Trainer, make_train_step
+
+__all__ = ["TrainState", "Trainer", "make_train_step"]

@@ -1,0 +1,118 @@
+"""Paper §3.1: partitioning invariants + Z3 mapping onto the interconnect."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import z3
+
+from repro.core import (MappingError, build_fig2_graph, build_lenet_like,
+                        build_resnet_block_chain, make_chip, map_partitions,
+                        partition_graph)
+from repro.core.graph import CROSSBAR_OPS, Graph
+from repro.core.partition import GCU_PARTITION
+
+
+# -------------------------------------------------------------- invariants
+def _check_invariants(pg):
+    # Invariant 1: at most one crossbar op per partition.
+    for p in pg.partitions:
+        assert sum(1 for n in p.nodes if n.op in CROSSBAR_OPS) <= 1
+    # Invariant 2: acyclic partition graph (all cross edges go forward).
+    for (src, dst) in pg.edges:
+        assert src == GCU_PARTITION or src < dst
+
+
+def test_fig2_partitioning():
+    """Paper Fig. 2: two convs + ADD; ADD must bundle with the second conv."""
+    g = build_fig2_graph()
+    pg = partition_graph(g)
+    _check_invariants(pg)
+    assert len(pg.partitions) == 2
+    add_part = pg.node_part["add"]
+    conv2_part = pg.node_part["conv2"]
+    assert add_part == conv2_part, "ADD must join the right-hand partition"
+    # conv1's output feeds both partitions; the shared array is combined
+    # (paper: edges with same endpoints are merged into one array).
+    assert (0, 1) in pg.edges
+    assert pg.edges[(0, 1)] == ["conv1:out"]
+
+
+def test_lenet_partitioning():
+    g = build_lenet_like()
+    pg = partition_graph(g)
+    _check_invariants(pg)
+    # 3 crossbar ops (conv, conv, gemm) -> 3 partitions
+    assert len(pg.partitions) == 3
+
+
+def test_resnet_chain_partitioning():
+    g = build_resnet_block_chain(n_blocks=3)
+    pg = partition_graph(g)
+    _check_invariants(pg)
+    assert len(pg.partitions) == 6  # 2 convs per block
+
+
+# ------------------------------------------------------------------- mapping
+def test_mapping_all_to_all():
+    g = build_lenet_like()
+    pg = partition_graph(g)
+    chip = make_chip(4, "all_to_all")
+    m = map_partitions(pg, chip)
+    assert sorted(m) == [0, 1, 2]
+    assert len(set(m.values())) == 3  # distinct cores
+
+
+def test_mapping_respects_topology():
+    """Every partition edge must land on an interconnect edge."""
+    g = build_resnet_block_chain(n_blocks=2)
+    pg = partition_graph(g)
+    chip = make_chip(8, "banded", k=3)
+    m = map_partitions(pg, chip)
+    for (src, dst) in pg.edges:
+        if src == GCU_PARTITION:
+            continue
+        assert chip.connected(m[src], m[dst]), (src, dst, m)
+
+
+def test_mapping_unsat_on_chain():
+    """Residual skip edges cannot map onto a pure chain topology."""
+    g = build_fig2_graph()
+    pg = partition_graph(g)
+    # partitions 0->1 via both conv1:out (skip) and conv2 path: the chain
+    # works for 2 partitions, so make it harder: 3 blocks on a 6-core chain
+    g3 = build_resnet_block_chain(n_blocks=3)
+    pg3 = partition_graph(g3)
+    # A resnet block's skip edge spans 2 partitions (src, src+2 is NOT needed
+    # here: conv1 feeds conv2 and the add inside conv2's partition); but the
+    # *block input* feeds both conv1 and the add in conv2's partition, so
+    # edges (p, p+1) and (p, p+2) both exist -> chain is UNSAT.
+    spans = {dst - src for (src, dst) in pg3.edges if src != GCU_PARTITION}
+    assert 2 in spans, "resnet chain should need a skip link"
+    with pytest.raises(MappingError):
+        map_partitions(pg3, make_chip(8, "chain"))
+    # banded topology (5-parallel-prism stand-in, Dazzi et al. [33]) works
+    m = map_partitions(pg3, make_chip(8, "banded", k=5))
+    assert len(set(m.values())) == len(pg3.partitions)
+
+
+def test_mapping_too_few_cores():
+    g = build_resnet_block_chain(n_blocks=3)
+    pg = partition_graph(g)
+    with pytest.raises(MappingError):
+        map_partitions(pg, make_chip(3, "all_to_all"))
+
+
+def test_mapping_sram_capacity():
+    g = build_lenet_like(img=12)
+    pg = partition_graph(g)
+    with pytest.raises(MappingError):
+        map_partitions(pg, make_chip(8, "all_to_all", sram_bytes=64))
+
+
+def test_mapping_crossbar_width():
+    g = build_lenet_like()
+    pg = partition_graph(g)
+    with pytest.raises(MappingError):
+        # fc layer is 10 x 32 -> width 8 is too narrow
+        map_partitions(pg, make_chip(8, "all_to_all", width=8))

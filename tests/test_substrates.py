@@ -1,0 +1,100 @@
+"""Substrate unit tests: data determinism, optimizer behaviour, serving."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.data import SyntheticLMData
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.serve import ServeEngine
+
+
+# ----------------------------------------------------------------------- data
+def test_data_deterministic_replay():
+    a = SyntheticLMData(128, 4, 16, seed=7)
+    b = SyntheticLMData(128, 4, 16, seed=7)
+    for _ in range(3):
+        ba, bb = a.next(), b.next()
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    # resume from cursor: batch 3 equals a fresh stream advanced to step 3
+    c = SyntheticLMData(128, 4, 16, seed=7)
+    c.load_state_dict({"step": 3, "seed": 7})
+    np.testing.assert_array_equal(c.next()["tokens"], a.next()["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    d = SyntheticLMData(64, 2, 8, seed=0)
+    b = d.next()
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+    # bigram structure: a majority of labels follow the successor table
+    succ = d._succ[b["tokens"]]
+    frac = (succ == b["labels"]).mean()
+    assert frac > 0.6
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=0.1,
+                                      weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params)
+    g = {"w": jnp.full((4,), 1e6)}
+    newp, _, m = adamw_update(g, opt, params, lr=0.1, grad_clip=1.0,
+                              weight_decay=0.0)
+    assert float(m["grad_norm"]) > 1e5
+    # clipped: update magnitude bounded by lr * step (|step| <= ~1/(1-b1))
+    assert np.all(np.abs(np.asarray(newp["w"] - params["w"])) < 0.5)
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100)) < 0.2
+    peak = float(cosine_schedule(10, peak_lr=1.0, warmup=10, total=100))
+    end = float(cosine_schedule(99, peak_lr=1.0, warmup=10, total=100))
+    assert peak > 0.9 and end < 0.2
+
+
+# -------------------------------------------------------------------- serving
+def test_serve_greedy_deterministic():
+    cfg = smoke_config("llama3.2-3b")
+    eng = ServeEngine(cfg, max_len=48)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
+    out1 = eng.generate(prompts, 8)
+    out2 = eng.generate(prompts, 8)
+    np.testing.assert_array_equal(out1, out2)
+    assert out1.shape == (2, 8)
+
+
+def test_serve_generate_matches_stepwise_decode():
+    """Engine greedy decode ≡ manual prefill + argmax decode loop."""
+    cfg = smoke_config("qwen2-7b")
+    eng = ServeEngine(cfg, max_len=32)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    out = eng.generate(prompts, 4)
+
+    model, params = eng.model, eng.params
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompts)},
+                                  32)
+    want = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(4):
+        want.append(np.asarray(tok))
+        logits, cache = model.decode_step(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    np.testing.assert_array_equal(out, np.stack(want, 1))
