@@ -2,45 +2,65 @@
 
 The paper generates arbitrary Python for the LCU but notes hardware may need
 a restricted interface.  Compare per-write decision cost of (a) the
-generated-code evaluator and (b) the enumerated table (the restricted
-variant), plus their config sizes.
+generated-code evaluator, (b) the enumerated table (the restricted variant),
+and (c) the compiled vectorized frontier table (``poly.FrontierTable``, the
+event-engine LCU): one dense int64 rank gather for *all* writes at once,
+plus their config sizes.
 """
 
 from __future__ import annotations
 
 import time
 
+import numpy as np
+
 from repro.core import poly
 from repro.core.lowering import WriteSpec, conv_read_relation
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    for h, w, fh in ((8, 8, 3), (16, 16, 3), (32, 32, 5)):
+    cases = ((8, 8, 3), (16, 16, 3), (32, 32, 5))
+    reps = 20
+    if smoke:
+        cases = cases[:1]
+        reps = 3
+    for h, w, fh in cases:
         oh, ow = h - fh + 1, w - fh + 1
         W1 = WriteSpec("A", "pixel", (4, h, w)).isl_write("WR")
         R2 = conv_read_relation("RD", (oh, ow), (4, h, w), fh, fh, 1, 0)
         dep = poly.compute_dep_info(W1, R2)
         src, fn = poly.generate_s_evaluator(dep)
         table = poly.s_table(dep)
+        vtab = poly.compile_frontier_table(dep, (4, h, w), (oh, ow))
 
         locs = [(c, i, j) for c in range(1) for i in range(h)
                 for j in range(w)]
         t0 = time.perf_counter()
-        for _ in range(20):
+        for _ in range(reps):
             for loc in locs:
                 fn(*loc)
-        t_gen = (time.perf_counter() - t0) / (20 * len(locs))
+        t_gen = (time.perf_counter() - t0) / (reps * len(locs))
         t0 = time.perf_counter()
-        for _ in range(20):
+        for _ in range(reps):
             for loc in locs:
                 table.get(loc)
-        t_tab = (time.perf_counter() - t0) / (20 * len(locs))
+        t_tab = (time.perf_counter() - t0) / (reps * len(locs))
+        # vectorized: one gather + running max over the whole write stream
+        ls = np.array(locs, np.int64)
+        ci, ii, jj = ls[:, 0], ls[:, 1], ls[:, 2]
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ranks = vtab.rank[ci, ii, jj]
+            np.maximum.accumulate(ranks)
+        t_vec = (time.perf_counter() - t0) / (reps * len(locs))
         rows.append({
             "bench": "lcu", "case": f"conv{fh}x{fh}/{h}x{w}",
             "gen_ns_per_write": round(t_gen * 1e9),
             "table_ns_per_write": round(t_tab * 1e9),
+            "vectorized_ns_per_write": round(t_vec * 1e9),
             "gen_code_bytes": len(src),
             "table_entries": len(table),
+            "vectorized_table_bytes": vtab.nbytes,
         })
     return rows

@@ -3,9 +3,16 @@
 The paper's entire premise is that crossbar reprogramming is so expensive
 that the NN must be resident and *pipelined*; this benchmark quantifies the
 cycle-count and utilization gap on the simulator for the Fig.2 pattern.
+
+It also times the two simulator engines against each other: the event-driven
+engine must report *identical* cycle counts and speedups to the dense
+reference scan (asserted here, so a divergence fails the benchmark run) while
+being several times faster in wall-clock.
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -13,23 +20,41 @@ from repro.core import (Simulator, build_lenet_like,
                         build_resnet_block_chain, compile_model, make_chip)
 
 
-def run() -> list:
+def _run_engine(prog, chip, images, engine):
+    sim = Simulator(prog, chip, check_raw=False, engine=engine)
+    t0 = time.perf_counter()
+    _, pipe = sim.run(images, schedule="pipelined")
+    _, seq = sim.run(images, schedule="sequential")
+    wall = time.perf_counter() - t0
+    return wall, pipe, seq
+
+
+def run(smoke: bool = False) -> list:
     rows = []
     cases = [
         ("lenet", build_lenet_like(), 8, (1, 12, 12)),
         ("resnet2", build_resnet_block_chain(2), 8, (4, 8, 8)),
         ("resnet4", build_resnet_block_chain(4), 12, (4, 8, 8)),
     ]
+    image_counts = (1, 4, 8)
+    if smoke:
+        cases = cases[:1]
+        image_counts = (1,)
     rng = np.random.default_rng(0)
     for name, graph, cores, shp in cases:
         chip = make_chip(cores, "banded")
         prog = compile_model(graph, chip)
-        for n_images in (1, 4, 8):
+        for n_images in image_counts:
             images = [rng.normal(size=shp).astype(np.float32)
                       for _ in range(n_images)]
-            sim = Simulator(prog, chip, check_raw=False)
-            _, pipe = sim.run(images, schedule="pipelined")
-            _, seq = sim.run(images, schedule="sequential")
+            ev_wall, pipe, seq = _run_engine(prog, chip, images, "event")
+            ref_wall, rpipe, rseq = _run_engine(prog, chip, images,
+                                                "reference")
+            assert (pipe.cycles, seq.cycles) == (rpipe.cycles, rseq.cycles), \
+                "engine divergence: cycle counts differ"
+            assert (pipe.messages, seq.messages) == (rpipe.messages,
+                                                     rseq.messages), \
+                "engine divergence: message counts differ"
             rows.append({
                 "bench": "pipeline", "case": f"{name}/n={n_images}",
                 "pipelined_cycles": pipe.cycles,
@@ -37,5 +62,8 @@ def run() -> list:
                 "speedup": round(seq.cycles / pipe.cycles, 2),
                 "pipe_util": round(pipe.mean_utilization(), 3),
                 "seq_util": round(seq.mean_utilization(), 3),
+                "event_ms": round(ev_wall * 1e3, 1),
+                "reference_ms": round(ref_wall * 1e3, 1),
+                "engine_speedup": round(ref_wall / ev_wall, 1),
             })
     return rows

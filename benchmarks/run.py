@@ -6,18 +6,25 @@
   bench_kernels  — Pallas kernels vs jnp oracles
   bench_train    — end-to-end host train/serve sanity
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only pipeline,...]
+Run: PYTHONPATH=src python -m benchmarks.run [--only pipeline,...] [--smoke]
+
+``--smoke`` runs every bench at its smallest case (for CI wall-clock): each
+bench whose ``run`` accepts a ``smoke`` flag shrinks its case list; the rest
+run unchanged.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest case per bench (CI mode)")
     args = ap.parse_args()
 
     from . import (bench_compile, bench_compression, bench_kernels,
@@ -35,7 +42,10 @@ def main() -> None:
     for name, mod in modules.items():
         print(f"=== {name} ===", flush=True)
         try:
-            rows = mod.run()
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                rows = mod.run(smoke=True)
+            else:
+                rows = mod.run()
         except Exception as e:  # keep the harness running
             print(f"  FAILED: {e!r}")
             failures += 1

@@ -6,7 +6,8 @@ from .graph import (Graph, build_fig2_graph, build_lenet_like,
 from .hwspec import ChipSpec, CoreSpec, make_chip
 from .mapping import MappingError, map_partitions
 from .partition import PartitionError, partition_graph
-from .simulator import DeadlockError, RawViolation, Simulator
+from .poly import HAVE_ISL, FrontierTable, compile_frontier_table
+from .simulator import DeadlockError, RawViolation, SimStats, Simulator
 
 __all__ = [
     "Graph", "build_fig2_graph", "build_lenet_like",
@@ -14,6 +15,7 @@ __all__ = [
     "ChipSpec", "CoreSpec", "make_chip",
     "MappingError", "map_partitions",
     "PartitionError", "partition_graph",
-    "DeadlockError", "RawViolation", "Simulator",
+    "DeadlockError", "RawViolation", "SimStats", "Simulator",
+    "HAVE_ISL", "FrontierTable", "compile_frontier_table",
     "compile_model", "serialize_config",
 ]

@@ -18,10 +18,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import islpy as isl
 import numpy as np
 
 from . import poly
+from .poly import isl  # islpy when installed, the finite fisl backend otherwise
 from .graph import CROSSBAR_OPS, Graph, Node
 from .partition import GCU_PARTITION, PartitionedGraph
 
@@ -127,6 +127,9 @@ class LcuArrayConfig:
     gen_src: str                      # generated Python source for S (paper §3.4)
     pad: int                          # local SRAM padding for this array
     shape: Tuple[int, ...]            # unpadded shape
+    # Vectorized LCU: S precompiled over all array locations (built once at
+    # lowering time; consumed by the event-driven simulator engine).
+    table: Optional[poly.FrontierTable] = None
 
     def make_frontier(self) -> poly.Frontier:
         ns: Dict[str, object] = {}
@@ -320,15 +323,19 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
                 in_pads.setdefault(v, 0)
 
         # ---- LCU: S per input array (Appendix A), with generated evaluator
+        # and the precompiled vectorized frontier table (event engine path).
         lcu: Dict[str, LcuArrayConfig] = {}
         for v, rel in reads.items():
             w1 = write_specs[v].isl_write("WR")
             dep = poly.compute_dep_info(w1, rel)
             gen_src, _ = poly.generate_s_evaluator(dep)
+            table = poly.compile_frontier_table(
+                dep, graph.values[v].shape, bounds)
             lcu[v] = LcuArrayConfig(value=v, src_partition=cross_in[v],
                                     dep=dep, gen_src=gen_src,
                                     pad=in_pads[v],
-                                    shape=graph.values[v].shape)
+                                    shape=graph.values[v].shape,
+                                    table=table)
 
         # ---- sends: every value of this partition consumed elsewhere/GMEM
         sends: List[SendSpec] = []

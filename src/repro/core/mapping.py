@@ -18,7 +18,13 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 import numpy as np
-import z3
+
+try:
+    import z3
+    HAVE_Z3 = True
+except ModuleNotFoundError:  # gate the dep: complete backtracking search
+    z3 = None
+    HAVE_Z3 = False
 
 from .graph import Graph
 from .hwspec import ChipSpec
@@ -72,11 +78,14 @@ def check_resources(pg: PartitionedGraph, chip: ChipSpec) -> None:
 
 def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
                    timeout_ms: int = 30_000) -> Dict[int, int]:
-    """partition idx -> core id, via Z3.  Raises MappingError when UNSAT."""
+    """partition idx -> core id, via Z3 (or exhaustive backtracking when the
+    solver is unavailable).  Raises MappingError when UNSAT."""
     check_resources(pg, chip)
     n_parts = len(pg.partitions)
     if n_parts > chip.n_cores:
         raise MappingError(f"{n_parts} partitions > {chip.n_cores} cores")
+    if not HAVE_Z3:
+        return _map_backtracking(pg, chip)
 
     solver = z3.Solver()
     solver.set("timeout", timeout_ms)
@@ -99,3 +108,46 @@ def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
             f"{chip.n_cores}-core chip with {len(chip.edges)} links")
     model = solver.model()
     return {i: model[loc[i]].as_long() for i in range(n_parts)}
+
+
+def _map_backtracking(pg: PartitionedGraph, chip: ChipSpec) -> Dict[int, int]:
+    """Complete DFS over core assignments with the same constraint set as the
+    Z3 encoding: distinct cores, every partition edge on an interconnect link.
+    Partition graphs are small (one per crossbar op), so exhaustive search is
+    exact: no solution found == UNSAT."""
+    n_parts = len(pg.partitions)
+    # all non-GCU edges go forward (src < dst, partition.py invariant 2), so
+    # when assigning dst every src is already placed
+    preds: Dict[int, list] = {i: [] for i in range(n_parts)}
+    for (src, dst) in pg.edges:
+        if src == GCU_PARTITION:
+            continue  # GCU reaches every core through GMEM
+        preds[dst].append(src)
+    assign: Dict[int, int] = {}
+    used = set()
+
+    def ok(pidx: int, core: int) -> bool:
+        for src in preds[pidx]:
+            if src in assign and (assign[src], core) not in chip.edges:
+                return False
+        return True
+
+    def dfs(pidx: int) -> bool:
+        if pidx == n_parts:
+            return True
+        for core in range(chip.n_cores):
+            if core in used or not ok(pidx, core):
+                continue
+            assign[pidx] = core
+            used.add(core)
+            if dfs(pidx + 1):
+                return True
+            used.discard(core)
+            del assign[pidx]
+        return False
+
+    if not dfs(0):
+        raise MappingError(
+            f"no valid mapping of {n_parts} partitions onto "
+            f"{chip.n_cores}-core chip with {len(chip.edges)} links")
+    return dict(assign)

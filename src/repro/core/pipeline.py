@@ -33,9 +33,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-import islpy as isl
-
 from . import poly
+from .poly import isl  # islpy when installed, the finite fisl backend otherwise
 
 EDGE_KINDS = ("pointwise", "causal", "full")
 

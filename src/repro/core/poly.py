@@ -9,6 +9,17 @@ Everything the paper does symbolically we do symbolically:
 * the LCU evaluator is *generated code*: the single-valued ``S`` is converted
   to a piecewise multi-affine function and emitted as Python source, mirroring
   the paper's ISL-AST -> Python-AST -> bytecode flow (§3.4/§3.5).
+
+When ``islpy`` is unavailable, the module falls back to the finite-relation
+backend in :mod:`.fisl` and an equivalent numeric (prefix-max) construction
+of ``S`` — semantically the paper's §3.5 enumerated "restricted hardware"
+variant.  ``HAVE_ISL`` records which backend is active.
+
+Beyond the paper's per-write generated code, :func:`compile_frontier_table`
+precompiles the whole piecewise multi-affine ``S`` into one dense lookup
+array per dependency (every array location -> flattened reader-iteration
+rank), which is what the event-driven simulator engine consumes: a write
+batch advances a frontier with a single vectorized gather + max.
 """
 
 from __future__ import annotations
@@ -16,7 +27,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import islpy as isl
+import numpy as np
+
+try:
+    import islpy as isl
+    HAVE_ISL = True
+except ModuleNotFoundError:  # gate the dep: fall back to finite relations
+    from . import fisl as isl
+    HAVE_ISL = False
 
 Point = Tuple[int, ...]
 
@@ -35,14 +53,18 @@ def map_from_str(s: str) -> isl.Map:
     return isl.Map(s)
 
 
-def point_tuple(p: isl.Point, ndim: int) -> Point:
+def point_tuple(p, ndim: int) -> Point:
+    if isinstance(p, tuple):          # fisl backend yields plain tuples
+        return p
     return tuple(
         int(p.get_coordinate_val(isl.dim_type.set, i).to_python()) for i in range(ndim)
     )
 
 
-def enumerate_set(s: isl.Set) -> List[Point]:
+def enumerate_set(s) -> List[Point]:
     """All integer points of a (bounded) set, in lexicographic order."""
+    if hasattr(s, "_points"):
+        return s._points()
     pts: List[Point] = []
     nd = s.dim(isl.dim_type.set)
     s.foreach_point(lambda p: pts.append(point_tuple(p, nd)))
@@ -50,13 +72,15 @@ def enumerate_set(s: isl.Set) -> List[Point]:
     return pts
 
 
-def enumerate_map(m: isl.Map) -> List[Tuple[Point, Point]]:
+def enumerate_map(m) -> List[Tuple[Point, Point]]:
     """All (in -> out) pairs of a bounded map."""
+    if hasattr(m, "_pairs"):
+        return m._pairs()
     nd_in = m.dim(isl.dim_type.in_)
     nd_out = m.dim(isl.dim_type.out)
     pairs: List[Tuple[Point, Point]] = []
 
-    def visit(p: isl.Point) -> None:
+    def visit(p) -> None:
         coords = point_tuple(p, nd_in + nd_out)
         pairs.append((coords[:nd_in], coords[nd_in:]))
 
@@ -65,7 +89,7 @@ def enumerate_map(m: isl.Map) -> List[Tuple[Point, Point]]:
     return pairs
 
 
-def single_point(s: isl.Set) -> Optional[Point]:
+def single_point(s) -> Optional[Point]:
     if s.is_empty():
         return None
     p = s.sample_point()
@@ -84,7 +108,7 @@ class DepInfo:
     array_ndim: int
 
 
-def compute_S(W1: isl.Map, R2: isl.Map) -> isl.Map:
+def compute_S(W1, R2):
     """Appendix A, verbatim.
 
     W1 : I -> O  (producer write access relation; injective per location)
@@ -92,6 +116,8 @@ def compute_S(W1: isl.Map, R2: isl.Map) -> isl.Map:
     returns S : O -> J, mapping each observed write location to the
     lexicographically-maximal reader iteration that is then safe to execute.
     """
+    if not HAVE_ISL:
+        return _numeric_S_parts(W1, R2)[0]
     # K := W1^-1(R2)   (J -> I): pair each read iteration with the write
     # iterations producing the locations it reads.  Reads of locations never
     # written (e.g. padding) drop out of the composition automatically.
@@ -113,7 +139,67 @@ def compute_S(W1: isl.Map, R2: isl.Map) -> isl.Map:
     return S
 
 
-def compute_dep_info(W1: isl.Map, R2: isl.Map) -> DepInfo:
+def _numeric_S_parts(W1, R2):
+    """Finite-backend equivalent of the Appendix-A recipe.
+
+    With all relations enumerated, ``S`` has a direct prefix-max reading:
+    order write iterations lexicographically ("write time"); for each reader
+    iteration j, T(j) is the latest write time among the written locations j
+    reads; the running lex-prefix maximum of T over sorted readers is the
+    write iteration L(j) whose completion unlocks j.  ``S`` then maps every
+    location written by L(j) to the lexmax such j — exactly
+    lexmax(M^-1) of the symbolic recipe.
+
+    Returns ``(S, D_lexmin, D_lexmax)``.
+    """
+    from . import fisl
+
+    nd_o = W1.dim(isl.dim_type.out)
+    nd_j = R2.dim(isl.dim_type.in_)
+    empty = fisl.Map.empty((nd_o, nd_j))
+    wpts, ni_w = W1.pts, W1.nin
+    rpts, ni_r = R2.pts, R2.nin
+    if not len(wpts) or not len(rpts):
+        return empty, None, None
+    wloc = wpts[:, ni_w:]
+    _, w_time = np.unique(wpts[:, :ni_w], axis=0, return_inverse=True)
+    loc_time: Dict[Point, int] = {}
+    for row, t in zip(wloc, w_time):
+        key = tuple(int(x) for x in row)
+        if key not in loc_time or int(t) > loc_time[key]:
+            loc_time[key] = int(t)
+    readers, r_inv = np.unique(rpts[:, :ni_r], axis=0, return_inverse=True)
+    times = np.array(
+        [loc_time.get(tuple(int(x) for x in row), -1) for row in rpts[:, ni_r:]],
+        np.int64)
+    T = np.full(len(readers), -1, np.int64)
+    np.maximum.at(T, r_inv, times)
+    in_D = T >= 0
+    D = readers[in_D]
+    if not len(D):
+        return empty, None, None
+    Tpref = np.maximum.accumulate(T[in_D])
+    # lexmax reader per distinct unlocking write time (last occurrence)
+    vals, first_rev = np.unique(Tpref[::-1], return_index=True)
+    last_reader = {int(v): int(len(Tpref) - 1 - i)
+                   for v, i in zip(vals, first_rev)}
+    rows: List[List[int]] = []
+    for row, t in zip(wloc, w_time):
+        li = last_reader.get(int(t))
+        if li is not None:
+            rows.append([int(x) for x in row] + [int(x) for x in D[li]])
+    pts = (np.array(rows, np.int64) if rows
+           else np.zeros((0, nd_o + nd_j), np.int64))
+    S = fisl.Map.from_points(pts, nin=nd_o, in_name="A", out_name="RD")
+    return S, tuple(int(x) for x in D[0]), tuple(int(x) for x in D[-1])
+
+
+def compute_dep_info(W1, R2) -> DepInfo:
+    if not HAVE_ISL:
+        S, dmin, dmax = _numeric_S_parts(W1, R2)
+        return DepInfo(S=S, D_lexmin=dmin, D_lexmax=dmax,
+                       reader_ndim=R2.dim(isl.dim_type.in_),
+                       array_ndim=W1.dim(isl.dim_type.out))
     S = compute_S(W1, R2)
     K = R2.apply_range(W1.reverse())
     D = K.domain()
@@ -176,8 +262,12 @@ def generate_s_evaluator(dep: DepInfo, fn_name: str = "s_eval") -> Tuple[str, ob
     Returns ``(source, callable)``.  The callable maps a location tuple to the
     maximal-safe reader iteration tuple, or ``None`` when this write does not
     advance the frontier.  This mirrors the paper's §3.4: code generated from
-    the ISL representation, compiled to Python bytecode.
+    the ISL representation, compiled to Python bytecode.  On the finite
+    backend the emitted code is the §3.5 enumerated-table variant instead of
+    piecewise-affine conditionals.
     """
+    if not HAVE_ISL:
+        return _generate_table_evaluator(dep, fn_name)
     nd_o = dep.array_ndim
     invars = [f"o{i}" for i in range(nd_o)]
     lines = [f"def {fn_name}({', '.join(invars) if invars else ''}):"]
@@ -198,6 +288,20 @@ def generate_s_evaluator(dep: DepInfo, fn_name: str = "s_eval") -> Tuple[str, ob
     src = "\n".join(lines) + "\n"
     ns: Dict[str, object] = {}
     exec(compile(src, f"<isl-gen:{fn_name}>", "exec"), ns)  # noqa: S102 - paper's own flow
+    return src, ns[fn_name]
+
+
+def _generate_table_evaluator(dep: DepInfo, fn_name: str) -> Tuple[str, object]:
+    """Finite-backend codegen: the enumerated ``S`` as a dict lookup."""
+    entries = {i: o for i, o in enumerate_map(dep.S)}
+    invars = [f"o{i}" for i in range(dep.array_ndim)]
+    args = ", ".join(invars)
+    key = f"({args},)" if len(invars) == 1 else f"({args})"
+    src = (f"_S_TABLE = {entries!r}\n\n"
+           f"def {fn_name}({args}):\n"
+           f"    return _S_TABLE.get({key})\n")
+    ns: Dict[str, object] = {}
+    exec(compile(src, f"<table-gen:{fn_name}>", "exec"), ns)  # noqa: S102
     return src, ns[fn_name]
 
 
@@ -241,3 +345,119 @@ class Frontier:
         if self.bound is None:
             return it < self.dep.D_lexmin
         return it <= self.bound or it < self.dep.D_lexmin
+
+
+# ------------------------------------------------- compiled frontier tables
+def iter_rank(point: Sequence[int], bounds: Sequence[int]) -> int:
+    """Flatten a reader iteration to its lexicographic rank (mixed radix)."""
+    r = 0
+    for p, b in zip(point, bounds):
+        r = r * int(b) + int(p)
+    return r
+
+
+@dataclasses.dataclass
+class FrontierTable:
+    """``S`` precompiled to a dense per-location lookup (the vectorized LCU).
+
+    ``rank[o] = iter_rank(S(o), reader_bounds)`` for every array location
+    ``o``, or ``-1`` where the write does not advance the frontier.  Because
+    consumer cores execute their iteration space in lexicographic order, a
+    frontier is a single integer threshold: iteration ``j`` is safe iff
+    ``iter_rank(j) <= max(observed-bound, d_lexmin_rank - 1)`` — one gather +
+    running max per delivered write batch, no generated-code calls.
+    """
+
+    rank: np.ndarray                  # int64, shape == array extents
+    reader_bounds: Tuple[int, ...]
+    d_lexmin_rank: int                # -1 => array never constrains execution
+    d_lexmax_rank: int
+
+    @property
+    def never_constrains(self) -> bool:
+        return self.d_lexmin_rank < 0
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.rank.nbytes)
+
+
+def _table_ranks_from_pairs(dep: DepInfo, array_shape: Sequence[int],
+                            bounds: Sequence[int]) -> np.ndarray:
+    rank = np.full(tuple(array_shape), -1, np.int64)
+    pairs = enumerate_map(dep.S)
+    if pairs:
+        locs = np.array([o for o, _ in pairs], np.int64)
+        outs = np.array([j for _, j in pairs], np.int64)
+        radix = np.ones(len(bounds), np.int64)
+        for d in range(len(bounds) - 2, -1, -1):
+            radix[d] = radix[d + 1] * bounds[d + 1]
+        rank[tuple(locs.T)] = outs @ radix
+    return rank
+
+
+def _table_ranks_isl_vectorized(dep: DepInfo, array_shape: Sequence[int],
+                                bounds: Sequence[int]) -> np.ndarray:
+    """Evaluate the piecewise multi-affine ``S`` on the full location grid.
+
+    Reuses the §3.4 codegen printers but evaluates each piece's guard and
+    affine outputs elementwise over numpy index grids, so the whole table is
+    produced with a handful of array ops per piece.
+    """
+    nd_j = dep.reader_ndim
+    invars = [f"o{i}" for i in range(dep.array_ndim)]
+    grids = np.meshgrid(*[np.arange(s, dtype=np.int64) for s in array_shape],
+                        indexing="ij")
+    env = {v: g for v, g in zip(invars, grids)}
+    pma = isl.PwMultiAff.from_map(dep.S)
+    pieces: List[Tuple[object, object]] = []
+    pma.foreach_piece(lambda st, ma: pieces.append((st, ma)))
+    rank = np.full(tuple(array_shape), -1, np.int64)
+    radix = np.ones(nd_j, np.int64)
+    for d in range(nd_j - 2, -1, -1):
+        radix[d] = radix[d + 1] * bounds[d + 1]
+    for st, ma in pieces:
+        for bset in st.get_basic_sets():
+            mask = np.ones(tuple(array_shape), bool)
+            for c in bset.get_constraints():
+                expr = _constraint_to_py(c, invars)
+                mask &= np.asarray(eval(expr, {"__builtins__": {}}, env))  # noqa: S307
+            if not mask.any():
+                continue
+            r = np.zeros(tuple(array_shape), np.int64)
+            for j in range(nd_j):
+                val = eval(_aff_to_py(ma.get_at(j), invars),  # noqa: S307
+                           {"__builtins__": {}}, env)
+                r += np.asarray(val, np.int64) * radix[j]
+            rank[mask] = r[mask]
+    return rank
+
+
+def compile_frontier_table(dep: DepInfo, array_shape: Sequence[int],
+                           reader_bounds: Sequence[int]) -> FrontierTable:
+    """Build the vectorized frontier table for one (producer array, reader).
+
+    ``array_shape`` are the unpadded array extents; ``reader_bounds`` is the
+    consumer core's iteration-space box (``CoreConfig.iter_bounds``).  Built
+    once at lowering time; O(|array|) memory, replaces one generated-code
+    call per SRAM write with a table gather.
+    """
+    bounds = tuple(int(b) for b in reader_bounds)
+    assert len(bounds) == dep.reader_ndim, (bounds, dep.reader_ndim)
+    if dep.D_lexmin is None:
+        return FrontierTable(np.full(tuple(array_shape), -1, np.int64),
+                             bounds, -1, -1)
+    if HAVE_ISL:
+        try:
+            rank = _table_ranks_isl_vectorized(dep, array_shape, bounds)
+        except Exception as e:  # defensive: fall back to point enumeration
+            import warnings
+            warnings.warn(
+                f"vectorized ISL table compilation failed ({e!r}); "
+                "falling back to per-point enumeration", RuntimeWarning)
+            rank = _table_ranks_from_pairs(dep, array_shape, bounds)
+    else:
+        rank = _table_ranks_from_pairs(dep, array_shape, bounds)
+    return FrontierTable(rank, bounds,
+                         iter_rank(dep.D_lexmin, bounds),
+                         iter_rank(dep.D_lexmax, bounds))

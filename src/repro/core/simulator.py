@@ -9,6 +9,42 @@ Faithful to the paper's functional model:
   * the GCU streams input data from GMEM to the input cores at a configurable
     DMA rate and collects output arrays back into GMEM.
 
+Two engines implement that model:
+
+``engine="event"`` (default) — event-driven and vectorized.  Instead of
+scanning every core on every cycle, a heapq-ordered event queue holds only
+the moments where machine state can change: message-batch arrivals, GCU
+stream steps, and core-readiness events.  Three structural changes make this
+fast without changing any observable timing:
+
+  * **Compiled frontier tables** (``poly.FrontierTable``, built once at
+    lowering): the piecewise multi-affine ``S`` is precompiled into a dense
+    per-location lookup of flattened reader-iteration ranks, so a frontier is
+    a single integer threshold and a delivered write batch advances it with
+    one gather + max — no generated-code call per SRAM write.
+  * **Batched payload streams**: producers emit one numpy payload buffer per
+    (destination, send-window) instead of a Python ``Message`` object per
+    pixel per destination; delivery is a handful of slice-assignments.
+  * **Batched core execution**: when a frontier threshold admits ``k``
+    pending iterations, all ``k`` are computed at once (windows gathered
+    vectorized, MxVs optionally stacked through the ``mxv_batch_fn`` hook so
+    the Pallas ``kernels/mxv.py`` path can serve as backend) while cycle
+    accounting still charges one iteration per cycle, exactly as §2
+    prescribes.
+
+Cycle accounting is bit-compatible with the reference engine: per cycle the
+phase order is (1) deliveries, (2) GCU streaming, (3) core execution in core
+order — encoded in the event sort key — and ``SimStats.cycles / messages /
+bytes_sent / busy`` are reproduced exactly, including the final-cycle
+truncation when the last output lands.  (Known relaxation: ``sram_high_water``
+is tracked at state transitions rather than sampled every cycle, which can
+report a same-cycle create/retire overlap the reference's end-of-cycle sample
+nets out — see ROADMAP "Open items".)
+
+``engine="reference"`` — the original dense ``for cycle in range(...)`` scan,
+kept as the equivalence oracle: both engines must produce bit-identical
+outputs and identical cycle/message statistics on every schedule.
+
 The simulator doubles as the correctness oracle harness: with
 ``check_raw=True`` every executed iteration asserts that all SRAM locations it
 reads were previously written (an LCU bug would trip this immediately).
@@ -17,6 +53,7 @@ reads were previously written (an LCU bug would trip this immediately).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
@@ -27,6 +64,8 @@ from .hwspec import ChipSpec
 from . import poly
 
 Point = Tuple[int, ...]
+
+_INF = 1 << 62
 
 
 class DeadlockError(Exception):
@@ -71,7 +110,7 @@ class SimStats:
 
 
 class _CoreImageState:
-    """Per-(core, image) runtime state."""
+    """Per-(core, image) runtime state (reference engine)."""
 
     def __init__(self, cfg: CoreConfig):
         self.sram: Dict[str, np.ndarray] = {}
@@ -101,17 +140,38 @@ def _unflatten(counter: int, bounds: Tuple[int, ...]) -> Point:
 
 
 class Simulator:
+    """``engine="event"`` (default) or ``engine="reference"`` (the oracle).
+
+    ``mxv_fn(m, v) -> y`` models one crossbar MxV; it is called per iteration
+    by both engines so results stay bit-identical across engines.
+    ``mxv_batch_fn(m, V) -> Y`` (rows of ``V``/``Y`` are iterations) is an
+    optional event-engine fast path that stacks all ready MxVs of a step into
+    one call — e.g. the Pallas ``kernels.mxv.crossbar_mxv`` path.  Stacked
+    BLAS/MXU matmuls may differ from per-vector results in final-ulp bits, so
+    the hook is opt-in.
+    """
+
     def __init__(self, program: AcceleratorProgram, chip: ChipSpec,
-                 mxv_fn=None, check_raw: bool = True):
+                 mxv_fn=None, check_raw: bool = True, engine: str = "event",
+                 mxv_batch_fn=None):
+        assert engine in ("event", "reference"), engine
         self.prog = program
         self.chip = chip
         self.mxv = mxv_fn if mxv_fn is not None else (lambda m, v: m @ v)
+        self.mxv_batch = mxv_batch_fn
         self.check_raw = check_raw
+        self.engine = engine
 
     # ------------------------------------------------------------------- run
     def run(self, images: List[np.ndarray], schedule: str = "pipelined",
             max_cycles: int = 1_000_000) -> Tuple[List[Dict[str, np.ndarray]], SimStats]:
         assert schedule in ("pipelined", "sequential")
+        if self.engine == "reference":
+            return self._run_reference(images, schedule, max_cycles)
+        return _EventEngine(self, images, schedule, max_cycles).run()
+
+    # =========================================================== reference
+    def _run_reference(self, images, schedule, max_cycles):
         prog, chip = self.prog, self.chip
         n_images = len(images)
         stats = SimStats()
@@ -423,3 +483,675 @@ class Simulator:
             elif spec.write.kind == "reduce" and spec.value in reduce_ready:
                 emit(spec, "reduce", (0,), reduce_ready[spec.value])
         return msgs
+
+
+# ============================================================= event engine
+class _TableFrontier:
+    """Runtime view of a compiled frontier table, as a *ramp*.
+
+    Streams are bulk-delivered at their first arrival cycle, so the frontier
+    records the full time-course of its threshold as (cycle, limit)
+    breakpoints: ``bp_limit`` is the running lexmax rank (mapped through the
+    D_lexmin/D_lexmax rules) after the write landing at ``bp_cycle``.  Both
+    arrays are non-decreasing, so ``unlock_vector`` — the first cycle at
+    which each queried iteration rank becomes safe — is one searchsorted.
+    """
+
+    __slots__ = ("lut", "dmin", "dmax", "bound", "_chunks_c", "_chunks_l",
+                 "_chunk_lasts", "_limit")
+
+    def __init__(self, table: poly.FrontierTable):
+        rank = table.rank
+        # observe() locations carry a representative channel 0; S is
+        # channel-invariant, so collapse the leading dim for 3-D arrays.
+        self.lut = rank[0] if rank.ndim == 3 else rank
+        self.dmin = table.d_lexmin_rank
+        self.dmax = table.d_lexmax_rank
+        self.bound = -1
+        limit0 = _INF if table.never_constrains else table.d_lexmin_rank - 1
+        # breakpoints as a chunk list (one chunk per delivered stream); the
+        # limits are globally non-decreasing, so a lookup first picks the
+        # chunk by its last limit, then binary-searches inside it — no
+        # repeated concatenation of the history
+        self._chunks_c = [np.array([-1], np.int64)]
+        self._chunks_l = [np.array([limit0], np.int64)]
+        self._chunk_lasts = [limit0]
+        self._limit = limit0
+
+    @property
+    def current_limit(self) -> int:
+        return self._limit
+
+    def observe_stream(self, arrive: np.ndarray, ranks: np.ndarray) -> None:
+        """Fold a whole write stream (arrival cycles + table ranks) in."""
+        if self._limit == _INF:
+            return
+        cm = np.maximum.accumulate(ranks)
+        np.maximum(cm, self.bound, out=cm)
+        self.bound = int(cm[-1])
+        limits = np.where(cm >= self.dmax, _INF,
+                          np.maximum(cm, self.dmin - 1))
+        self._chunks_c.append(arrive)
+        self._chunks_l.append(limits)
+        self._limit = int(limits[-1])
+        self._chunk_lasts.append(self._limit)
+
+    def unlock_vector(self, ranks: np.ndarray) -> np.ndarray:
+        """First cycle at which each rank (all <= current_limit) is safe."""
+        if len(self._chunks_l) == 1:
+            idx = np.searchsorted(self._chunks_l[0], ranks, side="left")
+            return self._chunks_c[0][idx]
+        ci = np.searchsorted(np.asarray(self._chunk_lasts), ranks,
+                             side="left")
+        out = np.empty(len(ranks), np.int64)
+        start = 0
+        n = len(ranks)
+        while start < n:            # ranks ascending => ci ascending runs
+            c = int(ci[start])
+            end = start + 1
+            while end < n and ci[end] == c:
+                end += 1
+            idx = np.searchsorted(self._chunks_l[c], ranks[start:end],
+                                  side="left")
+            out[start:end] = self._chunks_c[c][idx]
+            start = end
+        return out
+
+
+class _EvState:
+    """Per-(core, image) runtime state (event engine)."""
+
+    __slots__ = ("sram", "frontiers", "counter", "done", "pool_acc",
+                 "reduce_acc", "wtime", "sram_bytes", "win_view")
+
+    def __init__(self, cfg: CoreConfig, check_raw: bool):
+        self.sram: Dict[str, np.ndarray] = {}
+        self.frontiers: Dict[str, _TableFrontier] = {}
+        self.wtime: Dict[str, np.ndarray] = {}
+        for v, lc in cfg.lcu.items():
+            shp = lc.shape
+            if len(shp) == 3 and lc.pad:
+                c, h, w = shp
+                buf = np.zeros((c, h + 2 * lc.pad, w + 2 * lc.pad), np.float32)
+            else:
+                buf = np.zeros(shp, np.float32)
+            self.sram[v] = buf
+            if lc.table is None:     # config built without lower(): compile
+                lc.table = poly.compile_frontier_table(lc.dep, lc.shape,
+                                                       cfg.iter_bounds)
+            self.frontiers[v] = _TableFrontier(lc.table)
+            if check_raw:
+                if len(shp) == 3:
+                    self.wtime[v] = np.full(shp[1:], _INF, np.int64)
+                else:
+                    self.wtime[v] = np.full((), _INF, np.int64)
+        self.pool_acc: Dict[str, np.ndarray] = {}
+        self.reduce_acc: Dict[str, np.ndarray] = {}
+        self.counter = 0
+        self.done = False
+        self.sram_bytes = sum(b.nbytes for b in self.sram.values())
+        self.win_view = None          # cached conv sliding-window view
+
+
+class _Stream:
+    """A batched message flow: rows land one per listed arrival cycle."""
+
+    __slots__ = ("dst", "img", "value", "kind", "locs", "payload", "arrive")
+
+    def __init__(self, dst, img, value, kind, locs, payload, arrive):
+        self.dst = dst
+        self.img = img
+        self.value = value
+        self.kind = kind
+        self.locs = locs              # (k, 2) int array or None (full/reduce)
+        self.payload = payload        # (k, C) float32
+        self.arrive = arrive          # length-k int list, non-decreasing
+
+
+class _EvCore:
+    __slots__ = ("cfg", "order", "total", "cur_img", "next_free")
+
+    def __init__(self, cfg: CoreConfig, order: int):
+        self.cfg = cfg
+        self.order = order
+        self.total = int(np.prod(cfg.iter_bounds))
+        self.cur_img = 0
+        self.next_free = 0
+
+
+# per-cycle phase order, mirroring the reference engine's step order
+_PH_DELIVER, _PH_GCU, _PH_CORE = 0, 1, 2
+
+
+class _EventEngine:
+    def __init__(self, sim: Simulator, images, schedule: str, max_cycles: int):
+        self.sim = sim
+        self.prog = sim.prog
+        self.chip = sim.chip
+        self.images = images
+        self.schedule = schedule
+        self.max_cycles = max_cycles
+        self.n_images = len(images)
+
+        self.cores: Dict[int, _EvCore] = {
+            cid: _EvCore(cfg, i)
+            for i, (cid, cfg) in enumerate(self.prog.cores.items())}
+        self.part_core = self.prog.mapping
+        # sequential-schedule wakeups: partition -> consumer core ids
+        self.consumers: Dict[int, List[int]] = defaultdict(list)
+        self.gcu_consumers: List[int] = []
+        for cid, cfg in self.prog.cores.items():
+            for lc in cfg.lcu.values():
+                if lc.src_partition == -1:
+                    self.gcu_consumers.append(cid)
+                else:
+                    self.consumers[lc.src_partition].append(cid)
+        self._raw_ops = {cid: self._compile_raw_ops(cfg)
+                         for cid, cfg in self.prog.cores.items()}
+
+        self.states: Dict[Tuple[int, int], _EvState] = {}
+        self.outputs = [
+            {v: np.zeros(s, np.float32) for v, s in self.prog.gcu.outputs.items()}
+            for _ in range(self.n_images)]
+        self.out_counts = [defaultdict(int) for _ in range(self.n_images)]
+        self.out_expected = {v: sim._expected_chunks(v)
+                             for v in self.prog.gcu.outputs}
+        self.img_complete = [False] * self.n_images
+        self.complete_cycle: Dict[int, int] = {}   # img -> exact cycle
+        self.out_last_arrive = [0] * self.n_images
+        self.done_cycle: Dict[Tuple[int, int], int] = {}
+        self.gcu_done_cycle: Dict[int, int] = {}
+        self.gcu_waiting: Optional[int] = None
+        self.t_end: Optional[int] = None
+
+        self.heap: List[tuple] = []
+        self._seq = 0
+        self._sched_keys = set()
+
+        # accounting logs (filtered by t_end when assembling stats)
+        self.log_core: List[np.ndarray] = []
+        self.log_cycle: List[np.ndarray] = []
+        self.log_msgs: List[np.ndarray] = []
+        self.log_bytes: List[np.ndarray] = []
+        self.gcu_log: List[Tuple[np.ndarray, int]] = []
+        self._live = defaultdict(int)
+        self._hw = defaultdict(int)
+
+    # ------------------------------------------------------------ event heap
+    def _push(self, cycle: int, phase: int, order: int, kind: str, data):
+        self._seq += 1
+        heapq.heappush(self.heap, (cycle, phase, order, self._seq, kind, data))
+
+    def _sched_core(self, cid: int, cycle: int) -> None:
+        core = self.cores[cid]
+        cycle = max(cycle, core.next_free)
+        key = (cid, cycle)
+        if key in self._sched_keys:
+            return
+        self._sched_keys.add(key)
+        self._push(cycle, _PH_CORE, core.order, "core", cid)
+
+    # ------------------------------------------------------------ state mgmt
+    def _state(self, cid: int, img: int) -> _EvState:
+        key = (cid, img)
+        st = self.states.get(key)
+        if st is None:
+            st = _EvState(self.prog.cores[cid], self.sim.check_raw)
+            self.states[key] = st
+            self._live[cid] += st.sram_bytes
+            self._hw[cid] = max(self._hw[cid], self._live[cid])
+        return st
+
+    def _retire_state(self, cid: int, st: _EvState) -> None:
+        self._live[cid] -= st.sram_bytes
+        self._live[cid] -= sum(b.nbytes for b in st.pool_acc.values())
+
+    # ------------------------------------------------------------------ run
+    def run(self):
+        stats = SimStats()
+        if self.n_images == 0:
+            stats.cycles = 1
+            return self.outputs, stats
+
+        for cid in self.cores:
+            self._sched_core(cid, 0)
+        self._push(0, _PH_GCU, 0, "gcu", 0)
+
+        heap = self.heap
+        while heap:
+            cycle, phase, order, _, kind, data = heapq.heappop(heap)
+            if self.t_end is not None and cycle > self.t_end:
+                break
+            if cycle >= self.max_cycles:
+                raise DeadlockError(f"max_cycles={self.max_cycles} exceeded")
+            if kind == "stream":
+                self._deliver(cycle, data)
+            elif kind == "gcu":
+                self._gcu_stream(cycle, data)
+            else:  # "core"
+                self._sched_keys.discard((data, cycle))
+                self._core_step(cycle, data)
+
+        if self.t_end is None:
+            raise DeadlockError(
+                "no progress: event queue drained before completion; "
+                f"complete={self.img_complete}, "
+                f"cores={{c: s.counter for (c, _), s in self.states.items()}}")
+        if self.t_end >= self.max_cycles:
+            # completion would land past the cycle budget: the reference
+            # engine's dense scan raises here, so must we
+            raise DeadlockError(f"max_cycles={self.max_cycles} exceeded")
+        return self.outputs, self._assemble_stats()
+
+    def _assemble_stats(self) -> SimStats:
+        stats = SimStats()
+        stats.cycles = self.t_end + 1
+        for send_cycles, n_dsts in self.gcu_log:
+            stats.messages += int((send_cycles <= self.t_end).sum()) * n_dsts
+        if self.log_core:
+            cores = np.concatenate(self.log_core)
+            cycles = np.concatenate(self.log_cycle)
+            msgs = np.concatenate(self.log_msgs)
+            nbytes = np.concatenate(self.log_bytes)
+            valid = cycles <= self.t_end
+            cores, cycles = cores[valid], cycles[valid]
+            stats.messages += int(msgs[valid].sum())
+            stats.bytes_sent = int(nbytes[valid].sum())
+            for cid in np.unique(cores):
+                sel = cores == cid
+                stats.busy[int(cid)] = int(sel.sum())
+                stats.first_busy[int(cid)] = int(cycles[sel].min())
+                stats.last_busy[int(cid)] = int(cycles[sel].max())
+        for cid, b in self._hw.items():
+            stats.sram_high_water[cid] = b
+        return stats
+
+    # ------------------------------------------------------------------ GCU
+    def _gcu_stream(self, t: int, img: int) -> None:
+        if self.schedule == "sequential" and img > 0:
+            prev = self.complete_cycle.get(img - 1)
+            if prev is None:
+                self.gcu_waiting = img     # resumed by the completing delivery
+                return
+            if prev > t:
+                # previous image completes at a known future cycle: streaming
+                # resumes that same cycle (delivery phase precedes GCU phase)
+                self._push(prev, _PH_GCU, 0, "gcu", img)
+                return
+        gcu = self.prog.gcu
+        c_in, ih, iw = gcu.input_shape
+        total = ih * iw
+        dma = self.chip.dma_pixels_per_cycle
+        pix = np.arange(total)
+        send_cycles = t + pix // dma
+        arrive = send_cycles + 1
+        locs = np.stack([pix // iw, pix % iw], axis=1)
+        payload = np.ascontiguousarray(
+            self.images[img].reshape(c_in, total).T, np.float32)
+        arrive_list = arrive.tolist()
+        for dst in gcu.dst_cores:
+            s = _Stream(dst, img, gcu.input_value, "pixel", locs, payload,
+                        arrive_list)
+            self._push(arrive_list[0], _PH_DELIVER, 0, "stream", s)
+        self.gcu_log.append((send_cycles, len(gcu.dst_cores)))
+        end = int(send_cycles[-1])
+        self.gcu_done_cycle[img] = end
+        if self.schedule == "sequential":
+            for cid in self.gcu_consumers:
+                self._sched_core(cid, end)
+        if img + 1 < self.n_images:
+            self._push(end + 1, _PH_GCU, 0, "gcu", img + 1)
+
+    # ------------------------------------------------------------- delivery
+    # Streams are delivered in ONE event at their first arrival cycle: SRAM
+    # slice-assignments are safe ahead of time (single-assignment arrays) and
+    # the exact per-row timing is preserved in the frontier ramp / write-time
+    # stamps, which is all the consumers ever observe.
+    def _deliver(self, t: int, s: _Stream) -> None:
+        if s.dst == -1:
+            self._gmem_stream(t, s)
+        else:
+            self._sram_stream(t, s)
+
+    def _gmem_stream(self, t: int, s: _Stream) -> None:
+        arr = self.outputs[s.img][s.value]
+        if s.kind in ("full", "reduce"):
+            arr[:] = s.payload[0].reshape(arr.shape)
+        else:
+            ii, jj = s.locs[:, 0], s.locs[:, 1]
+            arr[:, ii, jj] = s.payload.T
+        counts = self.out_counts[s.img]
+        counts[s.value] += len(s.payload)
+        last = self.out_last_arrive[s.img]
+        if s.arrive[-1] > last:
+            last = s.arrive[-1]
+            self.out_last_arrive[s.img] = last
+        if not self.img_complete[s.img] and all(
+                counts[v] >= self.out_expected[v]
+                for v in self.prog.gcu.outputs):
+            self.img_complete[s.img] = True
+            self.complete_cycle[s.img] = last
+            if self.t_end is None and all(self.img_complete):
+                self.t_end = max(self.complete_cycle.values())
+            if self.gcu_waiting == s.img + 1:
+                self._push(max(t, last), _PH_GCU, 0, "gcu", self.gcu_waiting)
+                self.gcu_waiting = None
+
+    def _sram_stream(self, t: int, s: _Stream) -> None:
+        cfg = self.prog.cores[s.dst]
+        st = self._state(s.dst, s.img)
+        lc = cfg.lcu[s.value]
+        buf = st.sram[s.value]
+        fr = st.frontiers[s.value]
+        arrive = np.asarray(s.arrive, np.int64)
+        if s.kind in ("full", "reduce"):
+            buf[...] = s.payload[0].reshape(buf.shape)
+            if self.sim.check_raw:
+                st.wtime[s.value][...] = arrive[0]
+            fr.observe_stream(arrive, fr.lut[0:1])
+        else:
+            ii, jj = s.locs[:, 0], s.locs[:, 1]
+            buf[:, ii + lc.pad, jj + lc.pad] = s.payload.T
+            if self.sim.check_raw:
+                st.wtime[s.value][ii, jj] = arrive
+            fr.observe_stream(arrive, fr.lut[ii, jj])
+        core = self.cores[s.dst]
+        if s.img == core.cur_img:
+            self._sched_core(s.dst, t)
+
+    # -------------------------------------------------------- core execution
+    def _gate_cycle(self, cfg: CoreConfig, cid: int, img: int) -> Optional[int]:
+        """Sequential schedule: first cycle all producers count as done.
+
+        A producer finishing at cycle d is visible the same cycle only to
+        cores executing later in the per-cycle core order (reference step-3
+        semantics); earlier cores see it at d + 1.  Returns None while some
+        producer has not finished yet.
+        """
+        my_order = self.cores[cid].order
+        g = 0
+        for lc in cfg.lcu.values():
+            if lc.src_partition == -1:
+                dc = self.gcu_done_cycle.get(img)
+                if dc is None:
+                    return None
+                g = max(g, dc)
+            else:
+                pc = self.part_core[lc.src_partition]
+                d = self.done_cycle.get((pc, img))
+                if d is None:
+                    return None
+                g = max(g, d if self.cores[pc].order < my_order else d + 1)
+        return g
+
+    def _core_step(self, t: int, cid: int) -> None:
+        core = self.cores[cid]
+        if core.cur_img >= self.n_images:
+            return
+        img = core.cur_img
+        cfg = core.cfg
+        st = self._state(cid, img)
+        if st.done:
+            return
+        floor = 0
+        if self.schedule == "sequential":
+            gate = self._gate_cycle(cfg, cid, img)
+            if gate is None:
+                return               # woken again when producers finish
+            floor = gate
+        limit = _INF
+        for fr in st.frontiers.values():
+            cl = fr.current_limit
+            if cl < limit:
+                limit = cl
+        hi = min(limit, core.total - 1)
+        k = hi - st.counter + 1
+        if k <= 0:
+            return
+        # exact §2 pacing: c(r) = max(unlock(r), c(r-1) + 1), solved as a
+        # prefix-max so the whole batch is stamped in a few array ops
+        ranks = np.arange(st.counter, st.counter + k)
+        unlock = np.full(k, max(floor, core.next_free), np.int64)
+        for fr in st.frontiers.values():
+            if fr.current_limit != _INF or len(fr._chunks_l) > 1:
+                np.maximum(unlock, fr.unlock_vector(ranks), out=unlock)
+        rel = np.arange(k)
+        cycles = rel + np.maximum.accumulate(unlock - rel)
+        self._execute_batch(cid, cfg, st, img, cycles)
+        core.next_free = int(cycles[-1]) + 1
+        if st.counter >= core.total:
+            st.done = True
+            self._retire_state(cid, st)
+            st.win_view = None       # drop the cached view with the buffers
+            last_cycle = int(cycles[-1])
+            self.done_cycle[(cid, img)] = last_cycle
+            core.cur_img += 1
+            if core.cur_img < self.n_images:
+                self._sched_core(cid, last_cycle + 1)
+            if self.schedule == "sequential":
+                for cid2 in self.consumers.get(cfg.partition_idx, ()):
+                    self._sched_core(cid2, last_cycle)
+                    self._sched_core(cid2, last_cycle + 1)
+
+    def _execute_batch(self, cid: int, cfg: CoreConfig, st: _EvState,
+                       img: int, cycles: np.ndarray) -> None:
+        sim = self.sim
+        k = len(cycles)
+        idx = np.arange(st.counter, st.counter + k)
+        if len(cfg.iter_bounds) == 2:
+            w_b = cfg.iter_bounds[1]
+            pts0, pts1 = idx // w_b, idx % w_b
+        else:
+            pts0, pts1 = idx, None
+        if sim.check_raw and cfg.lcu:
+            self._raw_check_batch(cid, cfg, st, pts0, pts1, cycles)
+
+        env: Dict[str, np.ndarray] = {}          # value -> (k, ...) batches
+        pooled_rows: Dict[str, List[tuple]] = {}
+        reduce_rows: Dict[str, tuple] = {}
+
+        def pix(value: str) -> np.ndarray:
+            if value in env:
+                return env[value]
+            lc = cfg.lcu[value]
+            buf = st.sram[value]
+            if len(lc.shape) != 3:
+                return np.broadcast_to(buf.reshape(1, -1), (k, buf.size))
+            if k == 1:
+                return buf[:, int(pts0[0]) + lc.pad,
+                           int(pts1[0]) + lc.pad][None]
+            return buf[:, pts0 + lc.pad, pts1 + lc.pad].T
+
+        # 1. crossbar (windows gathered vectorized; MxV per iteration unless
+        # a stacked batch hook is installed)
+        if cfg.xbar_node is not None:
+            if cfg.xbar_node.op == "conv2d":
+                buf = st.sram[cfg.xbar_input]
+                s_ = cfg.conv_attrs["stride"]
+                fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
+                if k == 1:
+                    r, c = int(pts0[0]) * s_, int(pts1[0]) * s_
+                    V = buf[:, r:r + fh, c:c + fw].reshape(1, -1)
+                else:
+                    view = st.win_view
+                    if view is None:
+                        view = np.lib.stride_tricks.sliding_window_view(
+                            buf, (fh, fw), axis=(1, 2))
+                        st.win_view = view
+                    wins = view[:, pts0 * s_, pts1 * s_]     # (C, k, fh, fw)
+                    V = wins.transpose(1, 0, 2, 3).reshape(k, -1)
+            else:  # gemm: single-iteration space
+                V = st.sram[cfg.xbar_input].reshape(1, -1)
+            if sim.mxv_batch is not None:
+                Y = np.asarray(sim.mxv_batch(cfg.xbar_matrix, V))
+            elif k == 1:
+                Y = np.asarray(sim.mxv(cfg.xbar_matrix, V[0]))[None]
+            else:
+                Y = np.stack([np.asarray(sim.mxv(cfg.xbar_matrix, V[i]))
+                              for i in range(k)])
+            if cfg.xbar_bias is not None:
+                Y = Y + cfg.xbar_bias
+            env[cfg.xbar_node.outputs[0]] = Y.astype(np.float32)
+
+        # 2. DPU instruction sequence (elementwise ops batched; pooling
+        # updates run per iteration in reference float order)
+        for n in cfg.dpu_nodes:
+            if n.op == "relu":
+                env[n.outputs[0]] = np.maximum(pix(n.inputs[0]), 0.0)
+            elif n.op == "add":
+                env[n.outputs[0]] = pix(n.inputs[0]) + pix(n.inputs[1])
+            elif n.op in ("maxpool2d", "avgpool2d"):
+                out = n.outputs[0]
+                kk, s_ = n.attrs["k"], n.attrs["stride"]
+                shp = self.prog.pgraph.graph.values[out].shape
+                if out not in st.pool_acc:
+                    init = -np.inf if n.op == "maxpool2d" else 0.0
+                    st.pool_acc[out] = np.full(shp, init, np.float32)
+                    self._live[cid] += st.pool_acc[out].nbytes
+                    self._hw[cid] = max(self._hw[cid], self._live[cid])
+                acc = st.pool_acc[out]
+                x = pix(n.inputs[0])
+                rows = pooled_rows.setdefault(out, [])
+                is_max = n.op == "maxpool2d"
+                for i in range(k):
+                    oh, ow = int(pts0[i]), int(pts1[i])
+                    ph_lo = max(0, (oh - kk + s_) // s_ if s_ else 0)
+                    ph_hi = min(shp[1] - 1, oh // s_)
+                    pw_lo = max(0, (ow - kk + s_) // s_ if s_ else 0)
+                    pw_hi = min(shp[2] - 1, ow // s_)
+                    for ph in range(ph_lo, ph_hi + 1):
+                        for pw in range(pw_lo, pw_hi + 1):
+                            if is_max:
+                                acc[:, ph, pw] = np.maximum(acc[:, ph, pw],
+                                                            x[i])
+                            else:
+                                acc[:, ph, pw] += x[i] / (kk * kk)
+                            if oh == ph * s_ + kk - 1 and ow == pw * s_ + kk - 1:
+                                rows.append((i, ph, pw,
+                                             acc[:, ph, pw].copy()))
+            elif n.op == "global_avgpool":
+                out = n.outputs[0]
+                src_shape = self.prog.pgraph.graph.values[n.inputs[0]].shape
+                if out not in st.reduce_acc:
+                    st.reduce_acc[out] = np.zeros(src_shape[0], np.float32)
+                x = pix(n.inputs[0])
+                last = (src_shape[1] - 1, src_shape[2] - 1)
+                for i in range(k):
+                    st.reduce_acc[out] += x[i]
+                    if (int(pts0[i]), int(pts1[i])) == last:
+                        val = st.reduce_acc[out] / (src_shape[1] * src_shape[2])
+                        reduce_rows[out] = (i, val)
+                        env[out] = val[None]
+            else:
+                raise NotImplementedError(f"DPU op {n.op}")
+
+        # 3. sends -> batched streams (arrive at cycle + 1, paper §2)
+        msgs_it = np.zeros(k, np.int64)
+        bytes_it = np.zeros(k, np.int64)
+
+        def open_streams(spec: SendSpec, kind, locs, payload, arrive,
+                         iter_idx):
+            n_targets = len(spec.dst_cores) + (1 if spec.to_gmem else 0)
+            msgs_it[iter_idx] += n_targets
+            bytes_it[iter_idx] += n_targets * payload.shape[1] * payload.itemsize
+            for dst in spec.dst_cores:
+                stream = _Stream(dst, img, spec.value, kind, locs, payload,
+                                 arrive)
+                self._push(arrive[0], _PH_DELIVER, 0, "stream", stream)
+            if spec.to_gmem:
+                stream = _Stream(-1, img, spec.value, kind, locs, payload,
+                                 arrive)
+                self._push(arrive[0], _PH_DELIVER, 0, "stream", stream)
+
+        pix_locs = None
+        for spec in cfg.sends:
+            if spec.write.kind == "pixel" and spec.value in env:
+                payload = np.ascontiguousarray(env[spec.value], np.float32)
+                if pix_locs is None:
+                    pix_locs = np.stack([pts0, pts1], axis=1)
+                open_streams(spec, "pixel", pix_locs, payload,
+                             (cycles + 1).tolist(), np.arange(k))
+            elif spec.write.kind == "pool" and pooled_rows.get(spec.value):
+                rows = pooled_rows[spec.value]
+                iter_idx = np.array([r[0] for r in rows])
+                locs = np.array([[r[1], r[2]] for r in rows], np.int64)
+                payload = np.stack([r[3] for r in rows]).astype(np.float32)
+                open_streams(spec, "pool", locs, payload,
+                             (cycles[iter_idx] + 1).tolist(), iter_idx)
+            elif spec.write.kind == "full" and spec.value in env:
+                payload = np.array(env[spec.value][-1:], np.float32).reshape(1, -1)
+                open_streams(spec, "full", None, payload,
+                             [int(cycles[-1]) + 1], np.array([k - 1]))
+            elif spec.write.kind == "reduce" and spec.value in reduce_rows:
+                i, val = reduce_rows[spec.value]
+                payload = np.array(val, np.float32).reshape(1, -1)
+                open_streams(spec, "reduce", None, payload,
+                             [int(cycles[i]) + 1], np.array([i]))
+
+        st.counter += k
+        self.log_core.append(np.full(k, cid, np.int64))
+        self.log_cycle.append(cycles)
+        self.log_msgs.append(msgs_it)
+        self.log_bytes.append(bytes_it)
+
+    # ------------------------------------------------------------ RAW oracle
+    def _compile_raw_ops(self, cfg: CoreConfig):
+        """Per-core read-set descriptors mirroring Simulator._read_set."""
+        ops: Dict[str, list] = {}
+        for v, lc in cfg.lcu.items():
+            if len(lc.shape) != 3:
+                ops[v] = [("all1d",)]
+                continue
+            lst = []
+            if cfg.xbar_node is not None and cfg.xbar_input == v:
+                if cfg.xbar_node.op == "conv2d":
+                    ca = cfg.conv_attrs
+                    lst.append(("window", ca["stride"], ca["pad"],
+                                ca["fh"], ca["fw"]))
+                else:
+                    lst.append(("full",))
+            for n in cfg.dpu_nodes:
+                if v not in n.inputs:
+                    continue
+                if n.op in ("relu", "add"):
+                    lst.append(("point",))
+                elif n.op in ("maxpool2d", "avgpool2d"):
+                    lst.append(("window", n.attrs["stride"], 0,
+                                n.attrs["k"], n.attrs["k"]))
+                elif n.op == "global_avgpool":
+                    lst.append(("full",))
+            ops[v] = lst
+        return ops
+
+    def _raw_check_batch(self, cid: int, cfg: CoreConfig, st: _EvState,
+                         pts0: np.ndarray, pts1, cycles: np.ndarray) -> None:
+        raw_ops = self._raw_ops[cid]
+        for v, lc in cfg.lcu.items():
+            wt = st.wtime[v]
+            shp = lc.shape
+            for op in raw_ops.get(v, ()):
+                if op[0] == "all1d":
+                    if int(wt) > cycles[0]:
+                        raise RawViolation(
+                            f"{cfg.core_id}: read {v} before write")
+                    continue
+                H, W = shp[1], shp[2]
+                for i in range(len(pts0)):
+                    cyc = int(cycles[i])
+                    if op[0] == "full":
+                        need = int(wt.max())
+                    elif op[0] == "point":
+                        need = int(wt[int(pts0[i]), int(pts1[i])])
+                    else:  # window
+                        oh, ow = int(pts0[i]), int(pts1[i])
+                        _, s_, p_, fh, fw = op
+                        r0, r1 = max(0, oh * s_ - p_), min(H, oh * s_ - p_ + fh)
+                        c0, c1 = max(0, ow * s_ - p_), min(W, ow * s_ - p_ + fw)
+                        if r0 >= r1 or c0 >= c1:
+                            continue
+                        need = int(wt[r0:r1, c0:c1].max())
+                    if need > cyc:
+                        raise RawViolation(
+                            f"core {cfg.core_id} iter "
+                            f"({int(pts0[i])}, {int(pts1[i]) if pts1 is not None else 0})"
+                            f": reads {v} at unwritten locations")

@@ -10,6 +10,7 @@ import sys
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # gated: optional test dep
 from hypothesis import given, settings, strategies as st
 
 import jax

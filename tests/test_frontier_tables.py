@@ -1,0 +1,183 @@
+"""Compiled frontier tables (the vectorized LCU) ≡ brute-force dependency
+oracle, on whichever polyhedral backend is active.
+
+Unlike ``test_poly_deps`` (hypothesis-driven, needs islpy semantics),
+these cases are deterministic and run on both the islpy backend and the
+finite-relation ``fisl`` fallback, covering every operator family the
+lowering emits: conv windows (strided / padded), pooling, pointwise, full
+reads, and pool-kind producers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+import pytest
+
+from repro.core import poly
+from repro.core.lowering import (WriteSpec, conv_read_relation,
+                                 full_read_relation, pointwise_read_relation,
+                                 pool_read_relation)
+
+Point = Tuple[int, ...]
+
+
+def _brute_safe_trace(W1, R2):
+    """After each write iteration: the exact set of safe reader iterations."""
+    w_pairs = poly.enumerate_map(W1)
+    writes_by_iter: Dict[Point, List[Point]] = {}
+    for i, o in w_pairs:
+        writes_by_iter.setdefault(i, []).append(o)
+    r_pairs = poly.enumerate_map(R2)
+    reader_space = sorted({j for j, _ in r_pairs})
+    ever = {o for _, o in w_pairs}
+    deps: Dict[Point, Set[Point]] = {j: set() for j in reader_space}
+    for j, o in r_pairs:
+        if o in ever:
+            deps[j].add(o)
+    stream = [(i, writes_by_iter[i]) for i in sorted(writes_by_iter)]
+    seen: Set[Point] = set()
+    trace = []
+    for _, locs in stream:
+        seen.update(locs)
+        safe: Set[Point] = set()
+        ok = True
+        for j in reader_space:
+            if not ok:
+                break
+            if deps[j] <= seen:
+                safe.add(j)
+            else:
+                ok = False
+        trace.append(safe)
+    return stream, reader_space, trace
+
+
+def _check_case(W1, R2, array_shape, reader_bounds):
+    dep = poly.compute_dep_info(W1, R2)
+    # generated-code evaluator (paper §3.4 / §3.5 table variant)
+    src, fn = poly.generate_s_evaluator(dep)
+    assert "def s_eval(" in src
+    frontier = poly.Frontier(dep, fn)
+    # compiled vectorized table (the event-engine LCU)
+    table = poly.compile_frontier_table(dep, array_shape, reader_bounds)
+    bound_rank = -1
+    stream, reader_space, trace = _brute_safe_trace(W1, R2)
+    for (_, locs), safe_now in zip(stream, trace):
+        for loc in locs:
+            frontier.observe(loc)
+            bound_rank = max(bound_rank, int(table.rank[loc]))
+        if table.never_constrains:
+            limit = 1 << 62
+        elif bound_rank == table.d_lexmax_rank:
+            limit = 1 << 62
+        else:
+            limit = max(bound_rank, table.d_lexmin_rank - 1)
+        for j in reader_space:
+            want = j in safe_now
+            assert frontier.safe(j) == want, (j, safe_now)
+            got = poly.iter_rank(j, reader_bounds) <= limit
+            assert got == want, ("table", j, limit, want)
+
+
+CONV_CASES = [
+    # h, w, fh, fw, stride, pad, c
+    (6, 6, 3, 3, 1, 0, 2),
+    (8, 8, 3, 3, 1, 1, 1),
+    (8, 7, 3, 2, 2, 1, 2),
+    (5, 5, 1, 1, 1, 0, 1),
+    (6, 6, 3, 3, 2, 0, 1),
+]
+
+
+@pytest.mark.parametrize("h,w,fh,fw,stride,pad,c", CONV_CASES)
+def test_conv_reader_table(h, w, fh, fw, stride, pad, c):
+    oh = (h + 2 * pad - fh) // stride + 1
+    ow = (w + 2 * pad - fw) // stride + 1
+    W1 = WriteSpec("A", "pixel", (c, h, w)).isl_write("WR")
+    R2 = conv_read_relation("RD", (oh, ow), (c, h, w), fh, fw, stride, pad)
+    _check_case(W1, R2, (c, h, w), (oh, ow))
+
+
+@pytest.mark.parametrize("h,w,k,stride,c", [(6, 6, 2, 2, 1), (7, 7, 3, 2, 2),
+                                            (5, 5, 3, 1, 1)])
+def test_pool_reader_table(h, w, k, stride, c):
+    oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+    W1 = WriteSpec("A", "pixel", (c, h, w)).isl_write("WR")
+    R2 = pool_read_relation("RD", (oh, ow), (c, h, w), k, stride)
+    _check_case(W1, R2, (c, h, w), (oh, ow))
+
+
+@pytest.mark.parametrize("h,w,c", [(5, 5, 2), (4, 6, 1)])
+def test_pointwise_reader_table(h, w, c):
+    W1 = WriteSpec("A", "pixel", (c, h, w)).isl_write("WR")
+    R2 = pointwise_read_relation("RD", (h, w), (c, h, w))
+    _check_case(W1, R2, (c, h, w), (h, w))
+
+
+@pytest.mark.parametrize("h,w,c", [(4, 4, 2), (3, 5, 1)])
+def test_full_reader_table(h, w, c):
+    """GEMM-style consumer: the table must collapse to wait-for-last-write."""
+    W1 = WriteSpec("A", "pixel", (c, h, w)).isl_write("WR")
+    R2 = full_read_relation("RD", (c, h, w))
+    _check_case(W1, R2, (c, h, w), (1,))
+
+
+@pytest.mark.parametrize("h,w,k,stride,c", [(8, 8, 2, 2, 1), (9, 9, 3, 2, 2)])
+def test_conv_after_pool_producer_table(h, w, k, stride, c):
+    """Conv consumer fed by a pool-kind producer (windows finalize late)."""
+    ph, pw = (h - k) // stride + 1, (w - k) // stride + 1
+    if ph < 3 or pw < 3:
+        pytest.skip("too small after pooling")
+    W1 = WriteSpec("A", "pool", (c, ph, pw),
+                   dict(k=k, stride=stride)).isl_write("WR")
+    R2 = conv_read_relation("RD", (ph - 2, pw - 2), (c, ph, pw), 3, 3, 1, 0)
+    _check_case(W1, R2, (c, ph, pw), (ph - 2, pw - 2))
+
+
+def test_s_monotone_in_write_order():
+    """S must be single-valued and monotone over the write stream."""
+    W1 = WriteSpec("A", "pixel", (2, 6, 6)).isl_write("WR")
+    R2 = conv_read_relation("RD", (4, 4), (2, 6, 6), 3, 3, 1, 0)
+    dep = poly.compute_dep_info(W1, R2)
+    assert dep.S.is_single_valued()
+    _, fn = poly.generate_s_evaluator(dep)
+    prev = None
+    for it, loc in poly.enumerate_map(W1):
+        j = fn(*loc)
+        if j is None:
+            continue
+        if prev is not None:
+            assert tuple(j) >= prev, (it, loc, j, prev)
+        prev = tuple(j)
+
+
+def test_table_matches_generated_code_exactly():
+    """rank[o] == iter_rank(s_eval(o)) for every location (both backends)."""
+    W1 = WriteSpec("A", "pixel", (2, 6, 6)).isl_write("WR")
+    R2 = conv_read_relation("RD", (4, 4), (2, 6, 6), 3, 3, 1, 0)
+    dep = poly.compute_dep_info(W1, R2)
+    table = poly.compile_frontier_table(dep, (2, 6, 6), (4, 4))
+    _, fn = poly.generate_s_evaluator(dep)
+    for ci in range(2):
+        for i in range(6):
+            for j in range(6):
+                sj = fn(ci, i, j)
+                r = int(table.rank[ci, i, j])
+                if sj is None:
+                    assert r == -1, (ci, i, j)
+                else:
+                    assert r == poly.iter_rank(sj, (4, 4)), (ci, i, j)
+    assert table.d_lexmin_rank == poly.iter_rank(dep.D_lexmin, (4, 4))
+    assert table.d_lexmax_rank == poly.iter_rank(dep.D_lexmax, (4, 4))
+    assert table.nbytes == table.rank.nbytes
+
+
+def test_listing2_shape():
+    """The paper's Listing 2 relation: conv 3x3, stride 1, no padding."""
+    R2 = conv_read_relation("CONV_MXV", (4, 4), (3, 6, 6), 3, 3, 1, 0)
+    pairs = [(j, o) for j, o in poly.enumerate_map(R2) if j == (0, 0)]
+    locs = {o for _, o in pairs}
+    assert locs == {(c, i, j) for c in range(3) for i in range(3)
+                    for j in range(3)}

@@ -9,6 +9,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # gated: optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref

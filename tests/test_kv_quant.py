@@ -8,6 +8,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # gated: optional test dep
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # gated: optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ArchConfig, MoESpec

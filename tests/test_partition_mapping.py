@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-import z3
 
 from repro.core import (MappingError, build_fig2_graph, build_lenet_like,
                         build_resnet_block_chain, make_chip, map_partitions,

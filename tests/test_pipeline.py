@@ -16,6 +16,7 @@ import textwrap
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # gated: optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pipeline

@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Dict, List, Set, Tuple
 
 import pytest
+pytest.importorskip("hypothesis")  # gated: optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import poly

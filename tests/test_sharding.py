@@ -15,8 +15,8 @@ from repro.configs.base import get_arch, SHAPES, shapes_for
 from repro.models import build_model
 
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": AbstractMesh((("data", 16), ("model", 16))),
+    "multi": AbstractMesh((("pod", 2), ("data", 16), ("model", 16))),
 }
 
 

@@ -2,6 +2,8 @@
 
 The simulator's ``check_raw=True`` oracle independently asserts that every
 SRAM location read was previously written — a generated-LCU bug trips it.
+The event-driven engine (default) is additionally held to bit-identical
+outputs and identical cycle/message statistics against ``engine="reference"``.
 """
 
 from __future__ import annotations
@@ -13,6 +15,7 @@ from repro.core import (DeadlockError, Simulator, build_fig2_graph,
                         build_lenet_like, build_resnet_block_chain,
                         compile_model, execute_reference, make_chip,
                         serialize_config)
+from repro.core import poly
 from repro.kernels import ref as kref
 
 
@@ -100,17 +103,90 @@ def test_serialized_config_roundtrip():
             assert "def s_eval(" in lc["s_code"]  # generated LCU code ships
 
 
-def test_deadlock_detection():
+@pytest.mark.parametrize("engine", ["event", "reference"])
+def test_deadlock_detection(engine):
     """A core whose LCU never unblocks must be reported, not hang."""
     g = build_fig2_graph()
     chip = make_chip(4, "all_to_all")
     prog = compile_model(g, chip)
     # Sabotage: make core 0's frontier never advance by replacing its LCU
-    # evaluator with one that never returns a bound.
-    sim = Simulator(prog, chip, check_raw=False)
+    # evaluator (reference engine) and its compiled frontier table (event
+    # engine) with never-advancing variants.
+    sim = Simulator(prog, chip, check_raw=False, engine=engine)
     first_core = min(prog.cores)
     for lc in prog.cores[first_core].lcu.values():
         lc.gen_src = "def s_eval(*a):\n    return None\n"
         lc.dep.D_lexmin = (0,) * lc.dep.reader_ndim  # keep it bounded
+        lc.table = poly.FrontierTable(
+            rank=np.full(lc.table.rank.shape, -1, np.int64),
+            reader_bounds=lc.table.reader_bounds,
+            d_lexmin_rank=0, d_lexmax_rank=lc.table.d_lexmax_rank)
     with pytest.raises(DeadlockError):
         sim.run(_images((4, 8, 8), 1), max_cycles=2000)
+
+
+@pytest.mark.parametrize("engine", ["event", "reference"])
+def test_max_cycles_budget_enforced(engine):
+    """A run whose true completion exceeds max_cycles must raise in BOTH
+    engines (the event engine detects completion ahead of time but still has
+    to honor the cycle budget)."""
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip)
+    imgs = _images((4, 8, 8), 1)
+    _, stats = Simulator(prog, chip, engine=engine).run(imgs)
+    true_cycles = stats.cycles          # 78 for this graph
+    for budget in (true_cycles // 2, true_cycles - 1):
+        with pytest.raises(DeadlockError):
+            Simulator(prog, chip, engine=engine).run(imgs, max_cycles=budget)
+    # exactly enough budget succeeds
+    _, ok = Simulator(prog, chip, engine=engine).run(imgs,
+                                                     max_cycles=true_cycles)
+    assert ok.cycles == true_cycles
+
+
+# ------------------------------------------------------- engine equivalence
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+@pytest.mark.parametrize("case", ["lenet", "resnet_chain"])
+def test_engine_equivalence(case, schedule):
+    """Event engine ≡ reference engine: bit-identical outputs, identical
+    cycle/message/byte accounting (the perf rewrite must not change any
+    observable of the paper's §2 timing model)."""
+    if case == "lenet":
+        g, chip, shp = build_lenet_like(), make_chip(8, "banded"), (1, 12, 12)
+    else:
+        g, chip, shp = (build_resnet_block_chain(3), make_chip(10, "banded"),
+                        (4, 8, 8))
+    imgs = _images(shp, 3)
+    prog = compile_model(g, chip)
+    ref = Simulator(prog, chip, check_raw=True, engine="reference")
+    ev = Simulator(prog, chip, check_raw=True, engine="event")
+    o_ref, s_ref = ref.run(imgs, schedule=schedule)
+    o_ev, s_ev = ev.run(imgs, schedule=schedule)
+    for a, b in zip(o_ref, o_ev):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])   # bit-identical
+    assert s_ev.cycles == s_ref.cycles
+    assert s_ev.messages == s_ref.messages
+    assert s_ev.bytes_sent == s_ref.bytes_sent
+    assert dict(s_ev.busy) == dict(s_ref.busy)
+    assert s_ev.first_busy == s_ref.first_busy
+    assert s_ev.last_busy == s_ref.last_busy
+
+
+def test_event_engine_batched_mxv_hook():
+    """The stacked-MxV hook (Pallas-style backend) stays numerically close
+    to the per-iteration path and identical in timing."""
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip)
+    imgs = _images((4, 8, 8), 2)
+    base = Simulator(prog, chip, engine="event")
+    hooked = Simulator(prog, chip, engine="event",
+                       mxv_batch_fn=lambda m, V: (m @ V.T).T)
+    o1, s1 = base.run(imgs)
+    o2, s2 = hooked.run(imgs)
+    for a, b in zip(o1, o2):
+        for k in a:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-5, atol=1e-5)
+    assert (s1.cycles, s1.messages) == (s2.cycles, s2.messages)
