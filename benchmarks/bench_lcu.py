@@ -3,9 +3,11 @@
 The paper generates arbitrary Python for the LCU but notes hardware may need
 a restricted interface.  Compare per-write decision cost of (a) the
 generated-code evaluator, (b) the enumerated table (the restricted variant),
-and (c) the compiled vectorized frontier table (``poly.FrontierTable``, the
-event-engine LCU): one dense int64 rank gather for *all* writes at once,
-plus their config sizes.
+(c) the compiled vectorized frontier table (``poly.FrontierTable``, the
+event-engine LCU): one dense int64 rank gather for *all* writes at once, and
+(d) the full event-engine runtime LCU (``_TableFrontier``): fold the whole
+write stream into the breakpoint ramp *and* answer per-iteration unlock
+cycles — i.e. everything the simulator's control plane does per stream.
 """
 
 from __future__ import annotations
@@ -16,6 +18,7 @@ import numpy as np
 
 from repro.core import poly
 from repro.core.lowering import WriteSpec, conv_read_relation
+from repro.core.simulator import _TableFrontier
 
 
 def run(smoke: bool = False) -> list:
@@ -54,11 +57,24 @@ def run(smoke: bool = False) -> list:
             ranks = vtab.rank[ci, ii, jj]
             np.maximum.accumulate(ranks)
         t_vec = (time.perf_counter() - t0) / (reps * len(locs))
+        # runtime LCU: fold the stream into the frontier ramp AND answer
+        # first-safe-cycle for every reader iteration (the event engine's
+        # whole per-stream control-plane cost)
+        arrive = np.arange(len(locs), dtype=np.int64)
+        all_ranks = np.arange(max(vtab.d_lexmax_rank, 0) + 1, dtype=np.int64)
+        stream_ranks = vtab.rank[ci, ii, jj]
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fr = _TableFrontier(vtab)
+            fr.observe_stream(arrive, stream_ranks)
+            fr.unlock_vector(all_ranks)
+        t_stream = (time.perf_counter() - t0) / (reps * len(locs))
         rows.append({
             "bench": "lcu", "case": f"conv{fh}x{fh}/{h}x{w}",
             "gen_ns_per_write": round(t_gen * 1e9),
             "table_ns_per_write": round(t_tab * 1e9),
             "vectorized_ns_per_write": round(t_vec * 1e9),
+            "stream_ns_per_write": round(t_stream * 1e9),
             "gen_code_bytes": len(src),
             "table_entries": len(table),
             "vectorized_table_bytes": vtab.nbytes,

@@ -4,10 +4,15 @@ The paper's entire premise is that crossbar reprogramming is so expensive
 that the NN must be resident and *pipelined*; this benchmark quantifies the
 cycle-count and utilization gap on the simulator for the Fig.2 pattern.
 
-It also times the two simulator engines against each other: the event-driven
-engine must report *identical* cycle counts and speedups to the dense
-reference scan (asserted here, so a divergence fails the benchmark run) while
-being several times faster in wall-clock.
+It also times the simulator itself along both perf axes:
+
+  * engines — the event-driven engine vs the dense reference scan
+    (``engine_speedup``); identical cycle/message counts are asserted, so a
+    timing-model divergence fails the benchmark run;
+  * compute planes — the event engine with the stacked ``numpy`` plane vs
+    the per-iteration ``reference`` plane (the PR 1 execution structure);
+    ``plane_speedup`` is the wall-clock win of batching the crossbar MxVs,
+    with **bit-identical** outputs asserted across the whole matrix.
 """
 
 from __future__ import annotations
@@ -20,13 +25,20 @@ from repro.core import (Simulator, build_lenet_like,
                         build_resnet_block_chain, compile_model, make_chip)
 
 
-def _run_engine(prog, chip, images, engine):
-    sim = Simulator(prog, chip, check_raw=False, engine=engine)
+def _run_engine(prog, chip, images, engine, plane):
+    sim = Simulator(prog, chip, check_raw=False, engine=engine,
+                    compute_plane=plane)
     t0 = time.perf_counter()
-    _, pipe = sim.run(images, schedule="pipelined")
-    _, seq = sim.run(images, schedule="sequential")
+    o_pipe, pipe = sim.run(images, schedule="pipelined")
+    o_seq, seq = sim.run(images, schedule="sequential")
     wall = time.perf_counter() - t0
-    return wall, pipe, seq
+    return wall, o_pipe, o_seq, pipe, seq
+
+
+def _assert_same_outputs(a, b, what):
+    for oa, ob in zip(a, b):
+        for v in oa:
+            np.testing.assert_array_equal(oa[v], ob[v], err_msg=what)
 
 
 def run(smoke: bool = False) -> list:
@@ -47,14 +59,27 @@ def run(smoke: bool = False) -> list:
         for n_images in image_counts:
             images = [rng.normal(size=shp).astype(np.float32)
                       for _ in range(n_images)]
-            ev_wall, pipe, seq = _run_engine(prog, chip, images, "event")
-            ref_wall, rpipe, rseq = _run_engine(prog, chip, images,
-                                                "reference")
-            assert (pipe.cycles, seq.cycles) == (rpipe.cycles, rseq.cycles), \
-                "engine divergence: cycle counts differ"
-            assert (pipe.messages, seq.messages) == (rpipe.messages,
-                                                     rseq.messages), \
-                "engine divergence: message counts differ"
+            # event engine, stacked numpy plane (the default fast path)
+            ev_wall, eo_p, eo_s, pipe, seq = _run_engine(
+                prog, chip, images, "event", "numpy")
+            # event engine, per-iteration plane (PR 1 baseline structure)
+            pr1_wall, po_p, po_s, ppipe, pseq = _run_engine(
+                prog, chip, images, "event", "reference")
+            # dense reference engine (the timing-model oracle)
+            ref_wall, ro_p, ro_s, rpipe, rseq = _run_engine(
+                prog, chip, images, "reference", "numpy")
+            for other, what in ((rpipe, "engine"), (ppipe, "plane")):
+                assert pipe.cycles == other.cycles, f"{what} cycle divergence"
+                assert pipe.messages == other.messages, \
+                    f"{what} message divergence"
+            for other, what in ((rseq, "engine"), (pseq, "plane")):
+                assert seq.cycles == other.cycles, f"{what} cycle divergence"
+                assert seq.messages == other.messages, \
+                    f"{what} message divergence"
+            _assert_same_outputs(eo_p, ro_p, "event vs reference engine")
+            _assert_same_outputs(eo_s, ro_s, "event vs reference engine")
+            _assert_same_outputs(eo_p, po_p, "numpy vs reference plane")
+            _assert_same_outputs(eo_s, po_s, "numpy vs reference plane")
             rows.append({
                 "bench": "pipeline", "case": f"{name}/n={n_images}",
                 "pipelined_cycles": pipe.cycles,
@@ -62,8 +87,11 @@ def run(smoke: bool = False) -> list:
                 "speedup": round(seq.cycles / pipe.cycles, 2),
                 "pipe_util": round(pipe.mean_utilization(), 3),
                 "seq_util": round(seq.mean_utilization(), 3),
+                "messages": pipe.messages,
                 "event_ms": round(ev_wall * 1e3, 1),
+                "event_refplane_ms": round(pr1_wall * 1e3, 1),
                 "reference_ms": round(ref_wall * 1e3, 1),
+                "plane_speedup": round(pr1_wall / ev_wall, 1),
                 "engine_speedup": round(ref_wall / ev_wall, 1),
             })
     return rows

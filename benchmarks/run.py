@@ -11,12 +11,20 @@ Run: PYTHONPATH=src python -m benchmarks.run [--only pipeline,...] [--smoke]
 ``--smoke`` runs every bench at its smallest case (for CI wall-clock): each
 bench whose ``run`` accepts a ``smoke`` flag shrinks its case list; the rest
 run unchanged.
+
+Besides the human-readable dump, every bench writes a machine-readable
+``BENCH_<name>.json`` (``--json-dir``, default CWD) so the perf trajectory —
+wall-clock per engine/compute-plane, cycles, messages — is tracked across
+PRs.  Failures are recorded in the JSON too (``error`` field) rather than
+silently dropping the file.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
+import pathlib
 import sys
 
 
@@ -25,6 +33,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="smallest case per bench (CI mode)")
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_<name>.json files are written")
     args = ap.parse_args()
 
     from . import (bench_compile, bench_compression, bench_kernels,
@@ -38,18 +48,26 @@ def main() -> None:
         modules = {k: v for k, v in modules.items()
                    if k in args.only.split(",")}
 
+    json_dir = pathlib.Path(args.json_dir)
+    json_dir.mkdir(parents=True, exist_ok=True)
+
     failures = 0
     for name, mod in modules.items():
         print(f"=== {name} ===", flush=True)
+        record = {"bench": name, "smoke": args.smoke, "rows": []}
         try:
             if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
                 rows = mod.run(smoke=True)
             else:
                 rows = mod.run()
+            record["rows"] = rows
         except Exception as e:  # keep the harness running
             print(f"  FAILED: {e!r}")
+            record["error"] = repr(e)
             failures += 1
-            continue
+            rows = []
+        (json_dir / f"BENCH_{name}.json").write_text(
+            json.dumps(record, indent=2, default=str) + "\n")
         for row in rows:
             kv = ",".join(f"{k}={v}" for k, v in row.items()
                           if k not in ("bench",))

@@ -1,6 +1,9 @@
 """cmnnc core: the paper's compiler + CM-accelerator simulator."""
 
 from .compiler import compile_model, serialize_config
+from .compute_plane import (ComputeDescriptor, ComputePlane, NumpyPlane,
+                            PallasPlane, ReferencePlane, dequantize_int8,
+                            make_descriptor, resolve_plane)
 from .graph import (Graph, build_fig2_graph, build_lenet_like,
                     build_resnet_block_chain, execute_reference)
 from .hwspec import ChipSpec, CoreSpec, make_chip
@@ -18,4 +21,6 @@ __all__ = [
     "DeadlockError", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
     "compile_model", "serialize_config",
+    "ComputeDescriptor", "ComputePlane", "NumpyPlane", "PallasPlane",
+    "ReferencePlane", "dequantize_int8", "make_descriptor", "resolve_plane",
 ]

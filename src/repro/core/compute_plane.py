@@ -1,0 +1,243 @@
+"""Batched compute plane for the CM simulator (paper §2 compute model).
+
+The event engine admits whole *batches* of ready iterations at once (the
+control plane, PR 1); this module is the matching **compute plane**: it owns
+the crossbar MxV for both simulator engines so that stacking iterations into
+one ``(B, N)`` activation block cannot change a single output bit unless a
+backend explicitly trades exactness for speed.
+
+Three backends:
+
+``numpy`` (default)
+    Stacked ``einsum('bn,mn->bm', V, M)``.  ``np.einsum`` evaluates every
+    output element with the same contraction order regardless of the batch
+    size (verified by the backend-matrix test), so row ``i`` of a stacked
+    call is **bit-identical** to the per-iteration call — unlike BLAS, where
+    a 1-row GEMM dispatches to GEMV and last-ulp bits differ.  This is why
+    the simulator's default per-row MxV is the einsum row kernel
+    (:func:`mxv_rowwise`) rather than ``m @ v``.
+
+``pallas``
+    The ``kernels/mxv.py`` crossbar kernel: weights resident as int8
+    "conductances" with per-row scales (the analog-programming model, paper
+    §3.5), activations streamed through the MXU; ``dac=True`` additionally
+    quantizes activations per-row (the DAC model) and runs the fully-int8
+    kernel.  Runs on CPU via ``interpret=True``.  Equivalence is
+    tolerance-based: with a crossbar matrix that is already
+    dequantized-int8 (``compile_model(..., quantizer=dequantize_int8)``)
+    the float path matches the numpy plane within ``atol=2e-5`` (matmul
+    rounding only); otherwise int8 weight-quantization error dominates.
+
+``reference``
+    The per-iteration loop over ``mxv_fn`` — the PR 1 execution structure,
+    kept as the batching oracle.  With the default ``mxv_fn`` it is
+    bit-identical to the numpy plane; with a custom ``mxv_fn`` it is the
+    only backend that can honor it.
+
+Lowering tags every crossbar core with a :class:`ComputeDescriptor` (weight
+matrix, int8 quantization, op kind) so planes never re-derive per-core state
+at simulation time.  Custom backends plug in by subclassing
+:class:`ComputePlane` (or via the ``mxv_batch_fn`` hook) — the only contract
+is ``mxv_batch(desc, V)[i] == mxv_one(desc, V[i])`` to whatever tolerance
+the caller asserts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+# ------------------------------------------------------------- quantization
+def quantize_matrix(m: np.ndarray, bits: int = 8):
+    """Symmetric per-row weight quantization (pure-numpy twin of
+    ``kernels.ref.quantize_crossbar`` — same rounding, no jax import)."""
+    m = np.asarray(m, np.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = np.maximum(np.max(np.abs(m), axis=1), 1e-12)
+    scale = (absmax / qmax).astype(np.float32)
+    wq = np.clip(np.round(m / scale[:, None]), -qmax, qmax).astype(np.int8)
+    return wq, scale
+
+
+def quantize_rows(x: np.ndarray, bits: int = 8):
+    """Per-row symmetric activation quantization (the DAC model)."""
+    x = np.asarray(x, np.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = np.maximum(np.max(np.abs(x), axis=-1), 1e-12)
+    scale = (absmax / qmax).astype(np.float32)
+    xq = np.clip(np.round(x / scale[..., None]), -qmax, qmax).astype(np.int8)
+    return xq, scale
+
+
+def dequantize_int8(m: np.ndarray, bits: int = 8) -> np.ndarray:
+    """Round-trip a matrix through int8: the quantizer to pass to
+    ``compile_model`` when the pallas plane should match float planes within
+    matmul rounding only (requantizing the result is exact)."""
+    wq, scale = quantize_matrix(m, bits)
+    return wq.astype(np.float32) * scale[:, None]
+
+
+# --------------------------------------------------------------- descriptor
+@dataclasses.dataclass
+class ComputeDescriptor:
+    """Per-core compute-plane programming, built once at lowering.
+
+    ``matrix`` is the float crossbar matrix (paper Listing 1 layout);
+    ``wq``/``wscale`` are its int8 conductances + per-row scales for the
+    pallas plane.  ``op`` records the crossbar op kind ("conv2d"/"gemm").
+    """
+
+    matrix: np.ndarray                 # (M, N) float32, C-contiguous
+    wq: np.ndarray                     # (M, N) int8
+    wscale: np.ndarray                 # (M,) float32
+    op: str
+    dtype: str = "float32"
+
+
+def make_descriptor(matrix: np.ndarray, op: str) -> ComputeDescriptor:
+    m = np.ascontiguousarray(matrix, np.float32)
+    wq, wscale = quantize_matrix(m)
+    return ComputeDescriptor(matrix=m, wq=wq, wscale=wscale, op=op)
+
+
+def descriptor_for(cfg) -> ComputeDescriptor:
+    """Descriptor of a ``CoreConfig`` (lazily built for hand-made configs)."""
+    if cfg.compute is None:
+        cfg.compute = make_descriptor(
+            cfg.xbar_matrix,
+            cfg.xbar_node.op if cfg.xbar_node is not None else "gemm")
+    return cfg.compute
+
+
+# ------------------------------------------------------------------- planes
+def mxv_rowwise(m: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """The simulator's default per-row crossbar MxV.
+
+    Einsum-based so it is bit-identical to row ``i`` of the numpy plane's
+    stacked call (BLAS ``m @ v`` is not: GEMV and GEMM accumulate in
+    different orders)."""
+    return np.einsum("n,mn->m", v, m)
+
+
+class ComputePlane:
+    """Backend interface: stacked crossbar MxVs for a batch of iterations."""
+
+    name = "?"
+
+    def mxv_one(self, desc: ComputeDescriptor, v: np.ndarray) -> np.ndarray:
+        """One iteration's MxV (the reference engine's path)."""
+        return np.asarray(self.mxv_batch(desc, v[None]))[0]
+
+    def mxv_batch(self, desc: ComputeDescriptor, V: np.ndarray) -> np.ndarray:
+        """Stacked MxVs: rows of ``V``/result are iterations."""
+        raise NotImplementedError
+
+
+class NumpyPlane(ComputePlane):
+    """Stacked einsum matmul — fast and bit-identical per row (default)."""
+
+    name = "numpy"
+
+    def mxv_one(self, desc, v):
+        return np.einsum("n,mn->m", v, desc.matrix)
+
+    def mxv_batch(self, desc, V):
+        return np.einsum("bn,mn->bm", V, desc.matrix)
+
+
+class ReferencePlane(ComputePlane):
+    """Per-iteration loop over ``mxv_fn`` — the PR 1 structure, kept as the
+    batching oracle (and the only backend honoring a custom ``mxv_fn``)."""
+
+    name = "reference"
+
+    def __init__(self, mxv_fn: Optional[Callable] = None):
+        self.fn = mxv_fn if mxv_fn is not None else mxv_rowwise
+
+    def mxv_one(self, desc, v):
+        return np.asarray(self.fn(desc.matrix, v))
+
+    def mxv_batch(self, desc, V):
+        return np.stack([np.asarray(self.fn(desc.matrix, V[i]))
+                         for i in range(len(V))])
+
+
+class CustomPlane(ComputePlane):
+    """Back-compat adapter for the ``mxv_batch_fn`` hook."""
+
+    name = "custom"
+
+    def __init__(self, mxv_fn=None, mxv_batch_fn=None):
+        assert mxv_batch_fn is not None
+        self._one = mxv_fn
+        self._batch = mxv_batch_fn
+
+    def mxv_one(self, desc, v):
+        if self._one is not None:
+            return np.asarray(self._one(desc.matrix, v))
+        return np.asarray(self._batch(desc.matrix, v[None]))[0]
+
+    def mxv_batch(self, desc, V):
+        return np.asarray(self._batch(desc.matrix, V))
+
+
+class PallasPlane(ComputePlane):
+    """``kernels/mxv.py`` crossbar kernel as the compute plane.
+
+    Weights come pre-quantized from the descriptor (int8 + per-row scale);
+    batch sizes are bucketed to powers of two inside the padded kernel
+    wrappers so streaming batches reuse a bounded set of compiled kernels.
+    ``interpret=True`` (default) runs the Pallas kernel on CPU.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool = True, dac: bool = False):
+        self.interpret = interpret
+        self.dac = dac
+
+    def mxv_batch(self, desc, V):
+        from ..kernels import mxv as kmxv  # lazy: keep jax out of lowering
+        V = np.ascontiguousarray(V, np.float32)
+        if self.dac:
+            xq, xs = quantize_rows(V)
+            y = kmxv.crossbar_mxv_int8_padded(xq, xs, desc.wq, desc.wscale,
+                                              interpret=self.interpret)
+        else:
+            y = kmxv.crossbar_mxv_padded(V, desc.wq, desc.wscale,
+                                         interpret=self.interpret)
+        return np.asarray(y, np.float32)
+
+
+PLANES = ("numpy", "pallas", "reference")
+
+
+def resolve_plane(spec="auto", mxv_fn=None, mxv_batch_fn=None) -> ComputePlane:
+    """Resolve the ``Simulator`` compute-plane argument.
+
+    ``spec`` is a plane name, a :class:`ComputePlane` instance, or ``"auto"``
+    (numpy unless a custom ``mxv_fn`` forces the reference loop).  A
+    ``mxv_batch_fn`` hook always wins (back-compat with PR 1).
+    """
+    if mxv_batch_fn is not None:
+        return CustomPlane(mxv_fn, mxv_batch_fn)
+    if isinstance(spec, ComputePlane):
+        return spec
+    if spec == "auto":
+        spec = "reference" if mxv_fn is not None else "numpy"
+    if spec == "reference":
+        return ReferencePlane(mxv_fn)
+    if mxv_fn is not None:
+        raise ValueError(
+            f"compute_plane={spec!r} cannot honor a custom mxv_fn; use "
+            f"compute_plane='reference' (per-iteration loop) or pass a "
+            f"matching mxv_batch_fn hook instead")
+    if spec == "numpy":
+        return NumpyPlane()
+    if spec == "pallas":
+        return PallasPlane()
+    raise ValueError(f"unknown compute plane {spec!r}; expected one of "
+                     f"{PLANES} or a ComputePlane instance")

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import poly
+from .compute_plane import ComputeDescriptor, make_descriptor
 from .poly import isl  # islpy when installed, the finite fisl backend otherwise
 from .graph import CROSSBAR_OPS, Graph, Node
 from .partition import GCU_PARTITION, PartitionedGraph
@@ -158,6 +159,9 @@ class CoreConfig:
     sends: List[SendSpec]
     conv_attrs: Dict[str, int] = dataclasses.field(default_factory=dict)
     xbar_input: Optional[str] = None  # value name the crossbar reads
+    # Compute-plane descriptor (weight matrix + int8 quantization), built at
+    # lowering so simulator backends never re-derive per-core state.
+    compute: Optional[ComputeDescriptor] = None
 
     def dpu_listing(self) -> List[str]:
         """Human-readable DPU 'instruction sequence' for the config dump."""
@@ -355,11 +359,13 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
 
         dpu_nodes = [n for n in part.nodes
                      if n.op not in CROSSBAR_OPS and n.op != "flatten"]
+        compute = (make_descriptor(xbar_matrix, xbar.op)
+                   if xbar is not None else None)
         cores[core_id] = CoreConfig(
             core_id=core_id, partition_idx=part.idx, iter_bounds=bounds,
             xbar_node=xbar, xbar_matrix=xbar_matrix, xbar_bias=xbar_bias,
             dpu_nodes=dpu_nodes, lcu=lcu, sends=sends,
-            conv_attrs=conv_attrs, xbar_input=xbar_input)
+            conv_attrs=conv_attrs, xbar_input=xbar_input, compute=compute)
 
     # ---- GCU config
     if len(graph.inputs) != 1:

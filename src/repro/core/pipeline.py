@@ -77,6 +77,50 @@ class Schedule:
 
 
 def derive_schedule(edge_kinds: Sequence[str], n_items: int) -> Schedule:
+    """Earliest-start schedule from *compiled frontier tables* (vectorized).
+
+    Same Appendix-A ``S`` automata as :func:`derive_schedule_automata`, but
+    precompiled with ``poly.compile_frontier_table`` (the event-engine LCU):
+    the running lexmax over producer-write ranks becomes a prefix max, the
+    first producer item unlocking each consumer item is one ``searchsorted``
+    against that non-decreasing limit ramp, and the one-item-per-tick busy
+    chain ``start(t) = max(ready(t), start(t-1) + 1)`` is the same prefix-max
+    recurrence the simulator uses for §2 cycle pacing.
+    """
+    n_stages = len(edge_kinds) + 1
+    start = np.full((n_stages, n_items), -1, np.int64)
+    start[0] = np.arange(n_items)                       # stage 0 streams in
+    rel = np.arange(n_items)
+
+    for s in range(1, n_stages):
+        w1, r2 = edge_relations(edge_kinds[s - 1], n_items)
+        dep = poly.compute_dep_info(w1, r2)
+        table = poly.compile_frontier_table(dep, (n_items,), (n_items,))
+        prev = start[s - 1]
+        if table.never_constrains:
+            # no RAW dependency: every item is ready once polled (the
+            # automaton is first polled after producer item 0 lands)
+            ready = np.full(n_items, prev[0] + 1, np.int64)
+        else:
+            # limit after producer item t lands: the same saturating ramp the
+            # event engine's runtime LCU folds streams with
+            _, limits = poly.frontier_limit_ramp(
+                table.rank, table.d_lexmin_rank, table.d_lexmax_rank)
+            first = np.searchsorted(limits, rel, side="left")
+            assert (first < n_items).all(), "frontier never unlocked an item"
+            # write lands one tick after the producer ran (paper §2)
+            ready = prev[first] + 1
+        start[s] = rel + np.maximum.accumulate(ready - rel)
+
+    n_ticks = int(start.max()) + 1
+    table = np.full((n_stages, n_ticks), -1, np.int64)
+    for s in range(n_stages):
+        table[s, start[s]] = np.arange(n_items)
+    return Schedule(start=start, table=table, n_ticks=n_ticks)
+
+
+def derive_schedule_automata(edge_kinds: Sequence[str],
+                             n_items: int) -> Schedule:
     """Earliest-start schedule by *running the generated LCU automata*.
 
     Stage 0 has no input edge; stage s>0 consumes stage s-1's output array
@@ -84,6 +128,7 @@ def derive_schedule(edge_kinds: Sequence[str], n_items: int) -> Schedule:
     items in execution order, feeding each produced item to the consumer's
     frontier and asking it (via the generated code) when the consumer may
     run — the compile-time evaluation of the paper's runtime state machine.
+    Kept as the second oracle for the vectorized :func:`derive_schedule`.
     """
     n_stages = len(edge_kinds) + 1
     start = np.full((n_stages, n_items), -1, np.int64)

@@ -348,6 +348,31 @@ class Frontier:
 
 
 # ------------------------------------------------- compiled frontier tables
+INF_RANK = 1 << 62
+"""Saturation sentinel: a frontier limit of INF_RANK admits every iteration."""
+
+
+def frontier_limit_ramp(ranks: np.ndarray, d_lexmin_rank: int,
+                        d_lexmax_rank: int, floor: int = -1):
+    """Frontier limits after each write of a rank stream (the table contract).
+
+    ``ranks`` are table lookups (``FrontierTable.rank``) for a sequence of
+    writes in arrival order; ``floor`` carries the running bound of earlier
+    streams.  Returns ``(cummax, limits)``: the running lexmax rank, and the
+    admitted-iteration limit after each write — ``max(cummax, d_lexmin - 1)``
+    (iterations before ``D_lexmin`` have no dependency), saturating to
+    ``INF_RANK`` once ``D_lexmax`` is reached (then everything is safe).
+    Both consumers — the event engine's runtime LCU and the pipeline
+    scheduler — must use this one definition.
+    """
+    cm = np.maximum.accumulate(ranks)
+    if floor >= 0:
+        np.maximum(cm, floor, out=cm)
+    limits = np.where(cm >= d_lexmax_rank, INF_RANK,
+                      np.maximum(cm, d_lexmin_rank - 1))
+    return cm, limits
+
+
 def iter_rank(point: Sequence[int], bounds: Sequence[int]) -> int:
     """Flatten a reader iteration to its lexicographic rank (mixed radix)."""
     r = 0

@@ -27,23 +27,50 @@ fast without changing any observable timing:
     pixel per destination; delivery is a handful of slice-assignments.
   * **Batched core execution**: when a frontier threshold admits ``k``
     pending iterations, all ``k`` are computed at once (windows gathered
-    vectorized, MxVs optionally stacked through the ``mxv_batch_fn`` hook so
-    the Pallas ``kernels/mxv.py`` path can serve as backend) while cycle
-    accounting still charges one iteration per cycle, exactly as §2
-    prescribes.
+    vectorized, MxVs dispatched as one stacked call to the compute plane)
+    while cycle accounting still charges one iteration per cycle, exactly
+    as §2 prescribes.
+
+**Compute plane** (``core/compute_plane.py``): both engines route every
+crossbar MxV through a pluggable backend resolved from the ``compute_plane``
+argument —
+
+  * ``"numpy"`` (default): stacked ``einsum('bn,mn->bm')``.  Einsum is
+    batch-invariant (row ``i`` of a stacked call is bit-identical to the
+    per-row call), so the event engine's batching changes **no output bit**
+    relative to the reference engine or the per-iteration ``"reference"``
+    plane.
+  * ``"pallas"``: the ``kernels/mxv.py`` crossbar kernel (int8 weight
+    conductances + per-row scales; optional ``dac=True`` fully-int8 path),
+    running on CPU via ``interpret=True``.  Tolerance-based equivalence
+    (``atol≈2e-5`` vs the float planes once the crossbar matrix is
+    dequantized-int8, e.g. ``compile_model(..., quantizer=dequantize_int8)``).
+  * ``"reference"``: the per-iteration loop over ``mxv_fn`` — the PR 1
+    structure, kept as the batching oracle and the only backend honoring a
+    custom ``mxv_fn``.  Custom batched backends plug in either as a
+    ``ComputePlane`` subclass or through the legacy ``mxv_batch_fn`` hook.
+
+DPU pooling/accumulator updates get the same treatment: ``maxpool2d`` is
+always executed as a vectorized segment reduce (float max is exact under
+reordering, so this is bit-identical); ``avgpool2d``/``global_avgpool``
+accumulate float adds, so their vectorized segment-reduce path is guarded by
+``strict_float_order`` — ``True`` (default) keeps the reference's
+per-iteration accumulation order (bit-identical), ``False`` reassociates the
+adds (equivalent within ``np.allclose`` ``atol=1e-5`` on these workloads).
 
 Cycle accounting is bit-compatible with the reference engine: per cycle the
 phase order is (1) deliveries, (2) GCU streaming, (3) core execution in core
 order — encoded in the event sort key — and ``SimStats.cycles / messages /
 bytes_sent / busy`` are reproduced exactly, including the final-cycle
-truncation when the last output lands.  (Known relaxation: ``sram_high_water``
-is tracked at state transitions rather than sampled every cycle, which can
-report a same-cycle create/retire overlap the reference's end-of-cycle sample
-nets out — see ROADMAP "Open items".)
+truncation when the last output lands.  ``sram_high_water`` is replayed from
+the event log as end-of-cycle samples (buffer-lifetime intervals swept in
+cycle order), so same-cycle create/retire overlaps net out exactly as in the
+reference's dense per-cycle sampling.
 
 ``engine="reference"`` — the original dense ``for cycle in range(...)`` scan,
 kept as the equivalence oracle: both engines must produce bit-identical
-outputs and identical cycle/message statistics on every schedule.
+outputs and identical cycle/message statistics on every schedule (per
+compute plane — switching planes changes final-ulp bits, not timing).
 
 The simulator doubles as the correctness oracle harness: with
 ``check_raw=True`` every executed iteration asserts that all SRAM locations it
@@ -59,13 +86,14 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .compute_plane import descriptor_for, resolve_plane
 from .lowering import AcceleratorProgram, CoreConfig, SendSpec
 from .hwspec import ChipSpec
 from . import poly
 
 Point = Tuple[int, ...]
 
-_INF = 1 << 62
+_INF = poly.INF_RANK
 
 
 class DeadlockError(Exception):
@@ -142,23 +170,32 @@ def _unflatten(counter: int, bounds: Tuple[int, ...]) -> Point:
 class Simulator:
     """``engine="event"`` (default) or ``engine="reference"`` (the oracle).
 
-    ``mxv_fn(m, v) -> y`` models one crossbar MxV; it is called per iteration
-    by both engines so results stay bit-identical across engines.
-    ``mxv_batch_fn(m, V) -> Y`` (rows of ``V``/``Y`` are iterations) is an
-    optional event-engine fast path that stacks all ready MxVs of a step into
-    one call — e.g. the Pallas ``kernels.mxv.crossbar_mxv`` path.  Stacked
-    BLAS/MXU matmuls may differ from per-vector results in final-ulp bits, so
-    the hook is opt-in.
+    ``compute_plane`` selects the crossbar MxV backend for *both* engines:
+    ``"numpy"`` (stacked einsum, default — bit-identical per row),
+    ``"pallas"`` (the ``kernels/mxv.py`` crossbar kernel, int8 weights,
+    tolerance-based equivalence), ``"reference"`` (per-iteration loop over
+    ``mxv_fn``, the batching oracle), or any ``ComputePlane`` instance.
+    ``"auto"`` resolves to ``"numpy"``, unless ``mxv_fn`` is given (then the
+    reference loop is the only backend that can honor it; combining a custom
+    ``mxv_fn`` with a stacked plane raises).  ``mxv_batch_fn(m, V) -> Y`` is
+    the legacy hook for custom stacked backends and overrides the plane.
+
+    ``strict_float_order`` (event engine): keep the reference's per-iteration
+    float-accumulation order in avg-pool / global-avg-pool DPU updates
+    (default).  ``False`` switches them to vectorized segment reduces, which
+    reassociate float adds — equivalent within ``np.allclose`` tolerances,
+    identical in timing.
     """
 
     def __init__(self, program: AcceleratorProgram, chip: ChipSpec,
                  mxv_fn=None, check_raw: bool = True, engine: str = "event",
-                 mxv_batch_fn=None):
+                 mxv_batch_fn=None, compute_plane="auto",
+                 strict_float_order: bool = True):
         assert engine in ("event", "reference"), engine
         self.prog = program
         self.chip = chip
-        self.mxv = mxv_fn if mxv_fn is not None else (lambda m, v: m @ v)
-        self.mxv_batch = mxv_batch_fn
+        self.plane = resolve_plane(compute_plane, mxv_fn, mxv_batch_fn)
+        self.strict_float_order = strict_float_order
         self.check_raw = check_raw
         self.engine = engine
 
@@ -401,19 +438,19 @@ class Simulator:
                 return buf
             return buf[:, it[0] + lc.pad, it[1] + lc.pad]
 
-        # 1. crossbar
+        # 1. crossbar (one compute-plane MxV per iteration)
         if cfg.xbar_node is not None:
+            desc = descriptor_for(cfg)
             if cfg.xbar_node.op == "conv2d":
-                lc = cfg.lcu[cfg.xbar_input]
                 buf = st.sram[cfg.xbar_input]
                 s = cfg.conv_attrs["stride"]
                 fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
                 oh, ow = it
                 win = buf[:, oh * s:oh * s + fh, ow * s:ow * s + fw]
-                y = self.mxv(cfg.xbar_matrix, win.reshape(-1))
+                y = self.plane.mxv_one(desc, win.reshape(-1))
             else:  # gemm
                 vbuf = st.sram[cfg.xbar_input]
-                y = self.mxv(cfg.xbar_matrix, vbuf.reshape(-1))
+                y = self.plane.mxv_one(desc, vbuf.reshape(-1))
             if cfg.xbar_bias is not None:
                 y = y + cfg.xbar_bias
             env[cfg.xbar_node.outputs[0]] = y.astype(np.float32)
@@ -498,7 +535,7 @@ class _TableFrontier:
     """
 
     __slots__ = ("lut", "dmin", "dmax", "bound", "_chunks_c", "_chunks_l",
-                 "_chunk_lasts", "_limit")
+                 "_limit", "_cat_c", "_cat_l", "_dirty")
 
     def __init__(self, table: poly.FrontierTable):
         rank = table.rank
@@ -509,60 +546,56 @@ class _TableFrontier:
         self.dmax = table.d_lexmax_rank
         self.bound = -1
         limit0 = _INF if table.never_constrains else table.d_lexmin_rank - 1
+        c0 = np.array([-1], np.int64)
+        l0 = np.array([limit0], np.int64)
         # breakpoints as a chunk list (one chunk per delivered stream); the
-        # limits are globally non-decreasing, so a lookup first picks the
-        # chunk by its last limit, then binary-searches inside it — no
-        # repeated concatenation of the history
-        self._chunks_c = [np.array([-1], np.int64)]
-        self._chunks_l = [np.array([limit0], np.int64)]
-        self._chunk_lasts = [limit0]
+        # limits are globally non-decreasing, so the concatenated ramp stays
+        # sorted and a lookup is a single searchsorted (the concatenation is
+        # cached and rebuilt lazily after new chunks land)
+        self._chunks_c = [c0]
+        self._chunks_l = [l0]
         self._limit = limit0
+        self._cat_c = c0
+        self._cat_l = l0
+        self._dirty = False
 
     @property
     def current_limit(self) -> int:
         return self._limit
 
-    def observe_stream(self, arrive: np.ndarray, ranks: np.ndarray) -> None:
-        """Fold a whole write stream (arrival cycles + table ranks) in."""
+    def observe_stream(self, arrive: np.ndarray, ranks: np.ndarray) -> bool:
+        """Fold a whole write stream (arrival cycles + table ranks) in.
+
+        Returns True iff the frontier limit advanced (a False stream can
+        never unlock new iterations, so consumers skip the wake)."""
         if self._limit == _INF:
-            return
-        cm = np.maximum.accumulate(ranks)
-        np.maximum(cm, self.bound, out=cm)
+            return False
+        cm, limits = poly.frontier_limit_ramp(ranks, self.dmin, self.dmax,
+                                              self.bound)
         self.bound = int(cm[-1])
-        limits = np.where(cm >= self.dmax, _INF,
-                          np.maximum(cm, self.dmin - 1))
         self._chunks_c.append(arrive)
         self._chunks_l.append(limits)
-        self._limit = int(limits[-1])
-        self._chunk_lasts.append(self._limit)
+        self._dirty = True
+        new = int(limits[-1])
+        if new == self._limit:
+            return False
+        self._limit = new
+        return True
 
     def unlock_vector(self, ranks: np.ndarray) -> np.ndarray:
         """First cycle at which each rank (all <= current_limit) is safe."""
-        if len(self._chunks_l) == 1:
-            idx = np.searchsorted(self._chunks_l[0], ranks, side="left")
-            return self._chunks_c[0][idx]
-        ci = np.searchsorted(np.asarray(self._chunk_lasts), ranks,
-                             side="left")
-        out = np.empty(len(ranks), np.int64)
-        start = 0
-        n = len(ranks)
-        while start < n:            # ranks ascending => ci ascending runs
-            c = int(ci[start])
-            end = start + 1
-            while end < n and ci[end] == c:
-                end += 1
-            idx = np.searchsorted(self._chunks_l[c], ranks[start:end],
-                                  side="left")
-            out[start:end] = self._chunks_c[c][idx]
-            start = end
-        return out
+        if self._dirty:
+            self._cat_c = np.concatenate(self._chunks_c)
+            self._cat_l = np.concatenate(self._chunks_l)
+            self._dirty = False
+        return self._cat_c[self._cat_l.searchsorted(ranks, side="left")]
 
 
 class _EvState:
     """Per-(core, image) runtime state (event engine)."""
 
     __slots__ = ("sram", "frontiers", "counter", "done", "pool_acc",
-                 "reduce_acc", "wtime", "sram_bytes", "win_view")
+                 "reduce_acc", "wtime", "sram_bytes")
 
     def __init__(self, cfg: CoreConfig, check_raw: bool):
         self.sram: Dict[str, np.ndarray] = {}
@@ -590,7 +623,6 @@ class _EvState:
         self.counter = 0
         self.done = False
         self.sram_bytes = sum(b.nbytes for b in self.sram.values())
-        self.win_view = None          # cached conv sliding-window view
 
 
 class _Stream:
@@ -609,7 +641,8 @@ class _Stream:
 
 
 class _EvCore:
-    __slots__ = ("cfg", "order", "total", "cur_img", "next_free")
+    __slots__ = ("cfg", "order", "total", "cur_img", "next_free",
+                 "ridx", "p0", "p1", "locs", "win_idx")
 
     def __init__(self, cfg: CoreConfig, order: int):
         self.cfg = cfg
@@ -617,6 +650,30 @@ class _EvCore:
         self.total = int(np.prod(cfg.iter_bounds))
         self.cur_img = 0
         self.next_free = 0
+        # The whole iteration space unflattened once; batches slice views.
+        idx = np.arange(self.total)
+        self.ridx = idx
+        if len(cfg.iter_bounds) == 2:
+            w_b = cfg.iter_bounds[1]
+            self.p0 = idx // w_b
+            self.p1 = idx % w_b
+            self.locs = np.stack([self.p0, self.p1], axis=1)
+        else:
+            self.p0 = idx
+            self.p1 = None
+            self.locs = None          # 1-D spaces only emit full/reduce sends
+        # Conv window gather: flat indices of every iteration's input window
+        # into the (padded) SRAM plane, (total, fh*fw) — shared by all images.
+        self.win_idx = None
+        if (cfg.xbar_node is not None and cfg.xbar_node.op == "conv2d"
+                and cfg.xbar_input in cfg.lcu):
+            lc = cfg.lcu[cfg.xbar_input]
+            wp = lc.shape[2] + 2 * lc.pad
+            s_ = cfg.conv_attrs["stride"]
+            fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
+            base = (self.p0 * s_) * wp + self.p1 * s_
+            off = (np.arange(fh)[:, None] * wp + np.arange(fw)).reshape(-1)
+            self.win_idx = base[:, None] + off[None, :]
 
 
 # per-cycle phase order, mirroring the reference engine's step order
@@ -636,6 +693,8 @@ class _EventEngine:
         self.cores: Dict[int, _EvCore] = {
             cid: _EvCore(cfg, i)
             for i, (cid, cfg) in enumerate(self.prog.cores.items())}
+        self._rel = np.arange(max(c.total for c in self.cores.values())
+                              if self.cores else 1)
         self.part_core = self.prog.mapping
         # sequential-schedule wakeups: partition -> consumer core ids
         self.consumers: Dict[int, List[int]] = defaultdict(list)
@@ -648,6 +707,8 @@ class _EventEngine:
                     self.consumers[lc.src_partition].append(cid)
         self._raw_ops = {cid: self._compile_raw_ops(cfg)
                          for cid, cfg in self.prog.cores.items()}
+        self._pool_tabs: Dict[Tuple[int, str], tuple] = {}
+        self.strict_float = sim.strict_float_order
 
         self.states: Dict[Tuple[int, int], _EvState] = {}
         self.outputs = [
@@ -674,8 +735,9 @@ class _EventEngine:
         self.log_msgs: List[np.ndarray] = []
         self.log_bytes: List[np.ndarray] = []
         self.gcu_log: List[Tuple[np.ndarray, int]] = []
-        self._live = defaultdict(int)
-        self._hw = defaultdict(int)
+        # SRAM buffer-lifetime events: (cycle, core, delta_bytes, delta_count)
+        # replayed in _assemble_stats as the reference's end-of-cycle samples.
+        self._mem_events: List[Tuple[int, int, int, int]] = []
 
     # ------------------------------------------------------------ event heap
     def _push(self, cycle: int, phase: int, order: int, kind: str, data):
@@ -692,19 +754,24 @@ class _EventEngine:
         self._push(cycle, _PH_CORE, core.order, "core", cid)
 
     # ------------------------------------------------------------ state mgmt
-    def _state(self, cid: int, img: int) -> _EvState:
+    def _state(self, cid: int, img: int, t: int) -> _EvState:
+        """Get-or-create (core, image) state; ``t`` is the creation cycle.
+
+        The reference engine instantiates states the first cycle they are
+        touched (message arrival, or the cycle the core starts considering
+        the image), so the creation event is stamped with the event cycle.
+        """
         key = (cid, img)
         st = self.states.get(key)
         if st is None:
             st = _EvState(self.prog.cores[cid], self.sim.check_raw)
             self.states[key] = st
-            self._live[cid] += st.sram_bytes
-            self._hw[cid] = max(self._hw[cid], self._live[cid])
+            self._mem_events.append((t, cid, st.sram_bytes, 1))
         return st
 
-    def _retire_state(self, cid: int, st: _EvState) -> None:
-        self._live[cid] -= st.sram_bytes
-        self._live[cid] -= sum(b.nbytes for b in st.pool_acc.values())
+    def _retire_state(self, cid: int, st: _EvState, t: int) -> None:
+        pool = sum(b.nbytes for b in st.pool_acc.values())
+        self._mem_events.append((t, cid, -(st.sram_bytes + pool), -1))
 
     # ------------------------------------------------------------------ run
     def run(self):
@@ -762,9 +829,35 @@ class _EventEngine:
                 stats.busy[int(cid)] = int(sel.sum())
                 stats.first_busy[int(cid)] = int(cycles[sel].min())
                 stats.last_busy[int(cid)] = int(cycles[sel].max())
-        for cid, b in self._hw.items():
-            stats.sram_high_water[cid] = b
+        self._replay_high_water(stats)
         return stats
+
+    def _replay_high_water(self, stats: SimStats) -> None:
+        """Replay end-of-cycle SRAM sampling from the buffer-lifetime log.
+
+        The reference engine samples ``sum(buffer bytes of not-done states)``
+        per core at the end of every cycle.  Between log events the sum is
+        constant, so sweeping the (cycle, Δbytes, Δstates) events in cycle
+        order — applying all of a cycle's deltas *before* sampling — yields
+        the identical per-core maximum, including same-cycle create/retire
+        overlaps that net out.  Only cycles <= t_end exist in the reference.
+        """
+        ev = sorted(e for e in self._mem_events if e[0] <= self.t_end)
+        cur = defaultdict(int)
+        cnt = defaultdict(int)
+        i, n = 0, len(ev)
+        while i < n:
+            c = ev[i][0]
+            touched = set()
+            while i < n and ev[i][0] == c:
+                _, cid, db, dc = ev[i]
+                cur[cid] += db
+                cnt[cid] += dc
+                touched.add(cid)
+                i += 1
+            for cid in touched:
+                if cnt[cid] > 0 and cur[cid] >= stats.sram_high_water[cid]:
+                    stats.sram_high_water[cid] = cur[cid]
 
     # ------------------------------------------------------------------ GCU
     def _gcu_stream(self, t: int, img: int) -> None:
@@ -788,11 +881,11 @@ class _EventEngine:
         locs = np.stack([pix // iw, pix % iw], axis=1)
         payload = np.ascontiguousarray(
             self.images[img].reshape(c_in, total).T, np.float32)
-        arrive_list = arrive.tolist()
+        first = int(arrive[0])
         for dst in gcu.dst_cores:
             s = _Stream(dst, img, gcu.input_value, "pixel", locs, payload,
-                        arrive_list)
-            self._push(arrive_list[0], _PH_DELIVER, 0, "stream", s)
+                        arrive)
+            self._push(first, _PH_DELIVER, 0, "stream", s)
         self.gcu_log.append((send_cycles, len(gcu.dst_cores)))
         end = int(send_cycles[-1])
         self.gcu_done_cycle[img] = end
@@ -824,7 +917,7 @@ class _EventEngine:
         counts[s.value] += len(s.payload)
         last = self.out_last_arrive[s.img]
         if s.arrive[-1] > last:
-            last = s.arrive[-1]
+            last = int(s.arrive[-1])
             self.out_last_arrive[s.img] = last
         if not self.img_complete[s.img] and all(
                 counts[v] >= self.out_expected[v]
@@ -839,7 +932,7 @@ class _EventEngine:
 
     def _sram_stream(self, t: int, s: _Stream) -> None:
         cfg = self.prog.cores[s.dst]
-        st = self._state(s.dst, s.img)
+        st = self._state(s.dst, s.img, t)
         lc = cfg.lcu[s.value]
         buf = st.sram[s.value]
         fr = st.frontiers[s.value]
@@ -848,16 +941,19 @@ class _EventEngine:
             buf[...] = s.payload[0].reshape(buf.shape)
             if self.sim.check_raw:
                 st.wtime[s.value][...] = arrive[0]
-            fr.observe_stream(arrive, fr.lut[0:1])
+            advanced = fr.observe_stream(arrive, fr.lut[0:1])
         else:
             ii, jj = s.locs[:, 0], s.locs[:, 1]
             buf[:, ii + lc.pad, jj + lc.pad] = s.payload.T
             if self.sim.check_raw:
                 st.wtime[s.value][ii, jj] = arrive
-            fr.observe_stream(arrive, fr.lut[ii, jj])
-        core = self.cores[s.dst]
-        if s.img == core.cur_img:
-            self._sched_core(s.dst, t)
+            advanced = fr.observe_stream(arrive, fr.lut[ii, jj])
+        # a stream that does not advance its frontier limit cannot unlock
+        # new iterations, so the core wake would be a no-op
+        if advanced:
+            core = self.cores[s.dst]
+            if s.img == core.cur_img:
+                self._sched_core(s.dst, t)
 
     # -------------------------------------------------------- core execution
     def _gate_cycle(self, cfg: CoreConfig, cid: int, img: int) -> Optional[int]:
@@ -890,7 +986,10 @@ class _EventEngine:
             return
         img = core.cur_img
         cfg = core.cfg
-        st = self._state(cid, img)
+        # the reference engine only *considers* this image once the previous
+        # one retired (done + 1 == next_free), so a first-touch creation here
+        # is stamped at that cycle, not at the (possibly earlier) wake event
+        st = self._state(cid, img, max(t, core.next_free))
         if st.done:
             return
         floor = 0
@@ -910,20 +1009,19 @@ class _EventEngine:
             return
         # exact §2 pacing: c(r) = max(unlock(r), c(r-1) + 1), solved as a
         # prefix-max so the whole batch is stamped in a few array ops
-        ranks = np.arange(st.counter, st.counter + k)
+        ranks = core.ridx[st.counter:st.counter + k]
         unlock = np.full(k, max(floor, core.next_free), np.int64)
         for fr in st.frontiers.values():
             if fr.current_limit != _INF or len(fr._chunks_l) > 1:
                 np.maximum(unlock, fr.unlock_vector(ranks), out=unlock)
-        rel = np.arange(k)
+        rel = self._rel[:k]
         cycles = rel + np.maximum.accumulate(unlock - rel)
-        self._execute_batch(cid, cfg, st, img, cycles)
+        self._execute_batch(cid, core, cfg, st, img, cycles)
         core.next_free = int(cycles[-1]) + 1
         if st.counter >= core.total:
             st.done = True
-            self._retire_state(cid, st)
-            st.win_view = None       # drop the cached view with the buffers
             last_cycle = int(cycles[-1])
+            self._retire_state(cid, st, last_cycle)
             self.done_cycle[(cid, img)] = last_cycle
             core.cur_img += 1
             if core.cur_img < self.n_images:
@@ -933,21 +1031,56 @@ class _EventEngine:
                     self._sched_core(cid2, last_cycle)
                     self._sched_core(cid2, last_cycle + 1)
 
-    def _execute_batch(self, cid: int, cfg: CoreConfig, st: _EvState,
-                       img: int, cycles: np.ndarray) -> None:
+    def _pool_table(self, cid: int, node, cfg: CoreConfig,
+                    shp: Tuple[int, ...]) -> tuple:
+        """COO map of pixel -> contributing pool windows, built once per
+        (core, pool op): entry arrays sorted in the reference's accumulation
+        order (pixel asc, then window lex asc), a prefix ``row_off`` so a
+        batch of iterations is one slice, and ``complete[f]`` = the window
+        (flattened) whose last contributing pixel is ``f`` (or -1)."""
+        key = (cid, node.name)
+        tab = self._pool_tabs.get(key)
+        if tab is None:
+            H, W = cfg.iter_bounds
+            kk, s_ = node.attrs["k"], node.attrs["stride"]
+            PH, PW = shp[1], shp[2]
+            e_pix: List[int] = []
+            e_win: List[int] = []
+            complete = np.full(H * W, -1, np.int64)
+            row_off = np.zeros(H * W + 1, np.int64)
+            for oh in range(H):
+                for ow in range(W):
+                    f = oh * W + ow
+                    ph_lo = max(0, (oh - kk + s_) // s_ if s_ else 0)
+                    ph_hi = min(PH - 1, oh // s_)
+                    pw_lo = max(0, (ow - kk + s_) // s_ if s_ else 0)
+                    pw_hi = min(PW - 1, ow // s_)
+                    for ph in range(ph_lo, ph_hi + 1):
+                        for pw in range(pw_lo, pw_hi + 1):
+                            e_pix.append(f)
+                            e_win.append(ph * PW + pw)
+                            if (oh == ph * s_ + kk - 1
+                                    and ow == pw * s_ + kk - 1):
+                                complete[f] = ph * PW + pw
+                    row_off[f + 1] = len(e_pix)
+            tab = (np.array(e_pix, np.int64), np.array(e_win, np.int64),
+                   row_off, complete)
+            self._pool_tabs[key] = tab
+        return tab
+
+    def _execute_batch(self, cid: int, core: _EvCore, cfg: CoreConfig,
+                       st: _EvState, img: int, cycles: np.ndarray) -> None:
         sim = self.sim
         k = len(cycles)
-        idx = np.arange(st.counter, st.counter + k)
-        if len(cfg.iter_bounds) == 2:
-            w_b = cfg.iter_bounds[1]
-            pts0, pts1 = idx // w_b, idx % w_b
-        else:
-            pts0, pts1 = idx, None
+        c0 = st.counter
+        sl = slice(c0, c0 + k)
+        pts0 = core.p0[sl]
+        pts1 = core.p1[sl] if core.p1 is not None else None
         if sim.check_raw and cfg.lcu:
             self._raw_check_batch(cid, cfg, st, pts0, pts1, cycles)
 
         env: Dict[str, np.ndarray] = {}          # value -> (k, ...) batches
-        pooled_rows: Dict[str, List[tuple]] = {}
+        pooled_rows: Dict[str, tuple] = {}       # out -> (iter idx, win idx)
         reduce_rows: Dict[str, tuple] = {}
 
         def pix(value: str) -> np.ndarray:
@@ -962,39 +1095,29 @@ class _EventEngine:
                            int(pts1[0]) + lc.pad][None]
             return buf[:, pts0 + lc.pad, pts1 + lc.pad].T
 
-        # 1. crossbar (windows gathered vectorized; MxV per iteration unless
-        # a stacked batch hook is installed)
+        # 1. crossbar: windows gathered vectorized, one stacked compute-plane
+        # dispatch for the whole batch
         if cfg.xbar_node is not None:
             if cfg.xbar_node.op == "conv2d":
                 buf = st.sram[cfg.xbar_input]
-                s_ = cfg.conv_attrs["stride"]
-                fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
-                if k == 1:
-                    r, c = int(pts0[0]) * s_, int(pts1[0]) * s_
-                    V = buf[:, r:r + fh, c:c + fw].reshape(1, -1)
-                else:
-                    view = st.win_view
-                    if view is None:
-                        view = np.lib.stride_tricks.sliding_window_view(
-                            buf, (fh, fw), axis=(1, 2))
-                        st.win_view = view
-                    wins = view[:, pts0 * s_, pts1 * s_]     # (C, k, fh, fw)
-                    V = wins.transpose(1, 0, 2, 3).reshape(k, -1)
+                ch = buf.shape[0]
+                fi = core.win_idx[sl].reshape(-1)
+                # gather (C, k*fh*fw) then interleave to (k, C*fh*fw): each
+                # row is one iteration's window in crossbar layout
+                g = buf.reshape(ch, -1)[:, fi]
+                V = (g.reshape(ch, k, -1).transpose(1, 0, 2)
+                     .reshape(k, -1))
             else:  # gemm: single-iteration space
                 V = st.sram[cfg.xbar_input].reshape(1, -1)
-            if sim.mxv_batch is not None:
-                Y = np.asarray(sim.mxv_batch(cfg.xbar_matrix, V))
-            elif k == 1:
-                Y = np.asarray(sim.mxv(cfg.xbar_matrix, V[0]))[None]
-            else:
-                Y = np.stack([np.asarray(sim.mxv(cfg.xbar_matrix, V[i]))
-                              for i in range(k)])
+            Y = np.asarray(sim.plane.mxv_batch(descriptor_for(cfg), V))
             if cfg.xbar_bias is not None:
                 Y = Y + cfg.xbar_bias
-            env[cfg.xbar_node.outputs[0]] = Y.astype(np.float32)
+            env[cfg.xbar_node.outputs[0]] = Y.astype(np.float32, copy=False)
 
-        # 2. DPU instruction sequence (elementwise ops batched; pooling
-        # updates run per iteration in reference float order)
+        # 2. DPU instruction sequence.  Elementwise ops and max-pooling are
+        # batched (float max is exact under reordering); avg-pool/global-avg
+        # accumulate float adds, so their segment-reduce path is gated by
+        # strict_float_order.
         for n in cfg.dpu_nodes:
             if n.op == "relu":
                 env[n.outputs[0]] = np.maximum(pix(n.inputs[0]), 0.0)
@@ -1002,46 +1125,54 @@ class _EventEngine:
                 env[n.outputs[0]] = pix(n.inputs[0]) + pix(n.inputs[1])
             elif n.op in ("maxpool2d", "avgpool2d"):
                 out = n.outputs[0]
-                kk, s_ = n.attrs["k"], n.attrs["stride"]
+                kk = n.attrs["k"]
                 shp = self.prog.pgraph.graph.values[out].shape
-                if out not in st.pool_acc:
+                acc = st.pool_acc.get(out)
+                if acc is None:
                     init = -np.inf if n.op == "maxpool2d" else 0.0
-                    st.pool_acc[out] = np.full(shp, init, np.float32)
-                    self._live[cid] += st.pool_acc[out].nbytes
-                    self._hw[cid] = max(self._hw[cid], self._live[cid])
-                acc = st.pool_acc[out]
+                    # (PH*PW, C) layout: one row per pool window
+                    acc = np.full((shp[1] * shp[2], shp[0]), init, np.float32)
+                    st.pool_acc[out] = acc
+                    self._mem_events.append(
+                        (int(cycles[0]), cid, acc.nbytes, 0))
+                e_pix, e_win, row_off, complete = self._pool_table(
+                    cid, n, cfg, shp)
                 x = pix(n.inputs[0])
-                rows = pooled_rows.setdefault(out, [])
-                is_max = n.op == "maxpool2d"
-                for i in range(k):
-                    oh, ow = int(pts0[i]), int(pts1[i])
-                    ph_lo = max(0, (oh - kk + s_) // s_ if s_ else 0)
-                    ph_hi = min(shp[1] - 1, oh // s_)
-                    pw_lo = max(0, (ow - kk + s_) // s_ if s_ else 0)
-                    pw_hi = min(shp[2] - 1, ow // s_)
-                    for ph in range(ph_lo, ph_hi + 1):
-                        for pw in range(pw_lo, pw_hi + 1):
-                            if is_max:
-                                acc[:, ph, pw] = np.maximum(acc[:, ph, pw],
-                                                            x[i])
-                            else:
-                                acc[:, ph, pw] += x[i] / (kk * kk)
-                            if oh == ph * s_ + kk - 1 and ow == pw * s_ + kk - 1:
-                                rows.append((i, ph, pw,
-                                             acc[:, ph, pw].copy()))
+                lo, hi = int(row_off[c0]), int(row_off[c0 + k])
+                widx = e_win[lo:hi]
+                xrows = e_pix[lo:hi] - c0
+                if n.op == "maxpool2d":
+                    np.maximum.at(acc, widx, x[xrows])
+                elif not self.strict_float:
+                    np.add.at(acc, widx, x[xrows] / (kk * kk))
+                else:
+                    xd = x / (kk * kk)       # same value the loop adds
+                    for j in range(lo, hi):  # reference accumulation order
+                        acc[e_win[j]] += xd[e_pix[j] - c0]
+                comp = complete[c0:c0 + k]
+                di = np.nonzero(comp >= 0)[0]
+                if len(di):
+                    pooled_rows[out] = (di, comp[di])
             elif n.op == "global_avgpool":
                 out = n.outputs[0]
                 src_shape = self.prog.pgraph.graph.values[n.inputs[0]].shape
-                if out not in st.reduce_acc:
-                    st.reduce_acc[out] = np.zeros(src_shape[0], np.float32)
+                racc = st.reduce_acc.get(out)
+                if racc is None:
+                    racc = np.zeros(src_shape[0], np.float32)
+                    st.reduce_acc[out] = racc
                 x = pix(n.inputs[0])
-                last = (src_shape[1] - 1, src_shape[2] - 1)
-                for i in range(k):
-                    st.reduce_acc[out] += x[i]
-                    if (int(pts0[i]), int(pts1[i])) == last:
-                        val = st.reduce_acc[out] / (src_shape[1] * src_shape[2])
-                        reduce_rows[out] = (i, val)
-                        env[out] = val[None]
+                if self.strict_float:
+                    for i in range(k):
+                        racc += x[i]
+                else:
+                    racc += x.sum(axis=0)
+                # (H-1, W-1) is the lex-last point, so it can only be the
+                # final row of a batch
+                if (pts1 is not None and int(pts0[-1]) == src_shape[1] - 1
+                        and int(pts1[-1]) == src_shape[2] - 1):
+                    val = racc / (src_shape[1] * src_shape[2])
+                    reduce_rows[out] = (k - 1, val)
+                    env[out] = val[None]
             else:
                 raise NotImplementedError(f"DPU op {n.op}")
 
@@ -1052,41 +1183,44 @@ class _EventEngine:
         def open_streams(spec: SendSpec, kind, locs, payload, arrive,
                          iter_idx):
             n_targets = len(spec.dst_cores) + (1 if spec.to_gmem else 0)
-            msgs_it[iter_idx] += n_targets
-            bytes_it[iter_idx] += n_targets * payload.shape[1] * payload.itemsize
+            per_it = n_targets * payload.shape[1] * payload.itemsize
+            if iter_idx is None:             # every iteration sends one row
+                msgs_it[...] += n_targets
+                bytes_it[...] += per_it
+            else:
+                msgs_it[iter_idx] += n_targets
+                bytes_it[iter_idx] += per_it
+            first = int(arrive[0])
             for dst in spec.dst_cores:
-                stream = _Stream(dst, img, spec.value, kind, locs, payload,
-                                 arrive)
-                self._push(arrive[0], _PH_DELIVER, 0, "stream", stream)
+                self._push(first, _PH_DELIVER, 0, "stream",
+                           _Stream(dst, img, spec.value, kind, locs, payload,
+                                   arrive))
             if spec.to_gmem:
-                stream = _Stream(-1, img, spec.value, kind, locs, payload,
-                                 arrive)
-                self._push(arrive[0], _PH_DELIVER, 0, "stream", stream)
+                self._push(first, _PH_DELIVER, 0, "stream",
+                           _Stream(-1, img, spec.value, kind, locs, payload,
+                                   arrive))
 
-        pix_locs = None
         for spec in cfg.sends:
             if spec.write.kind == "pixel" and spec.value in env:
                 payload = np.ascontiguousarray(env[spec.value], np.float32)
-                if pix_locs is None:
-                    pix_locs = np.stack([pts0, pts1], axis=1)
-                open_streams(spec, "pixel", pix_locs, payload,
-                             (cycles + 1).tolist(), np.arange(k))
-            elif spec.write.kind == "pool" and pooled_rows.get(spec.value):
-                rows = pooled_rows[spec.value]
-                iter_idx = np.array([r[0] for r in rows])
-                locs = np.array([[r[1], r[2]] for r in rows], np.int64)
-                payload = np.stack([r[3] for r in rows]).astype(np.float32)
-                open_streams(spec, "pool", locs, payload,
-                             (cycles[iter_idx] + 1).tolist(), iter_idx)
+                open_streams(spec, "pixel", core.locs[sl], payload,
+                             cycles + 1, None)
+            elif spec.write.kind == "pool" and spec.value in pooled_rows:
+                di, wins = pooled_rows[spec.value]
+                acc = st.pool_acc[spec.value]
+                pw_b = spec.write.shape[2]
+                locs = np.stack([wins // pw_b, wins % pw_b], axis=1)
+                open_streams(spec, "pool", locs, acc[wins],
+                             cycles[di] + 1, di)
             elif spec.write.kind == "full" and spec.value in env:
                 payload = np.array(env[spec.value][-1:], np.float32).reshape(1, -1)
                 open_streams(spec, "full", None, payload,
-                             [int(cycles[-1]) + 1], np.array([k - 1]))
+                             cycles[-1:] + 1, np.array([k - 1]))
             elif spec.write.kind == "reduce" and spec.value in reduce_rows:
                 i, val = reduce_rows[spec.value]
                 payload = np.array(val, np.float32).reshape(1, -1)
                 open_streams(spec, "reduce", None, payload,
-                             [int(cycles[i]) + 1], np.array([i]))
+                             cycles[i:i + 1] + 1, np.array([i]))
 
         st.counter += k
         self.log_core.append(np.full(k, cid, np.int64))

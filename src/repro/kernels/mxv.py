@@ -109,3 +109,73 @@ def crossbar_mxv_int8(xq: jax.Array, xs: jax.Array, wq: jax.Array,
         scratch_shapes=[pltpu.VMEM((bb, bm), jnp.int32)],
         interpret=interpret,
     )(xq, xs.reshape(b, 1), wq, ws.reshape(1, m))
+
+
+# ---------------------------------------------------- shape-agnostic wrappers
+# The blocked kernels require every dimension to divide its block size.  The
+# simulator's compute plane streams arbitrary (B, N) activation stacks, so
+# these wrappers zero-pad up to block multiples and slice the result back.
+# B is additionally bucketed to the next power of two (>= bb): a streaming
+# batch then reuses a bounded set of compiled kernels instead of retracing
+# per distinct batch size.  Zero padding is exact: padded activation columns
+# meet padded weight columns (0 * 0 contributes 0.0 to the f32/int32
+# accumulator) and padded rows are discarded.
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _bucket_batch(b: int, bb: int) -> int:
+    p = bb
+    while p < b:
+        p <<= 1
+    return p
+
+
+def _padded_dims(b, n, m, bb, bm, bn):
+    bp = _bucket_batch(b, bb)
+    np_ = n if n <= bn else _ceil_to(n, bn)
+    mp = m if m <= bm else _ceil_to(m, bm)
+    return bp, np_, mp
+
+
+def crossbar_mxv_padded(x, wq, scale, bb: int = 8, bm: int = 128,
+                        bn: int = 128, interpret: bool = True) -> jax.Array:
+    """``crossbar_mxv`` for arbitrary shapes (zero-pad + slice)."""
+    x = jnp.asarray(x)
+    wq = jnp.asarray(wq)
+    scale = jnp.asarray(scale)
+    b, n = x.shape
+    m = wq.shape[0]
+    bp, np_, mp = _padded_dims(b, n, m, bb, bm, bn)
+    if (bp, np_) != (b, n):
+        x = jnp.pad(x, ((0, bp - b), (0, np_ - n)))
+    if (mp, np_) != (m, n):
+        wq = jnp.pad(wq, ((0, mp - m), (0, np_ - n)))
+    if mp != m:
+        scale = jnp.pad(scale, (0, mp - m), constant_values=1.0)
+    y = crossbar_mxv(x, wq, scale, bb=bb, bm=bm, bn=bn, interpret=interpret)
+    return y[:b, :m]
+
+
+def crossbar_mxv_int8_padded(xq, xs, wq, ws, bb: int = 8, bm: int = 128,
+                             bn: int = 128, interpret: bool = True) -> jax.Array:
+    """``crossbar_mxv_int8`` for arbitrary shapes (zero-pad + slice)."""
+    xq = jnp.asarray(xq)
+    xs = jnp.asarray(xs)
+    wq = jnp.asarray(wq)
+    ws = jnp.asarray(ws)
+    b, n = xq.shape
+    m = wq.shape[0]
+    bp, np_, mp = _padded_dims(b, n, m, bb, bm, bn)
+    if (bp, np_) != (b, n):
+        xq = jnp.pad(xq, ((0, bp - b), (0, np_ - n)))
+    if bp != b:
+        xs = jnp.pad(xs, (0, bp - b), constant_values=1.0)
+    if (mp, np_) != (m, n):
+        wq = jnp.pad(wq, ((0, mp - m), (0, np_ - n)))
+    if mp != m:
+        ws = jnp.pad(ws, (0, mp - m), constant_values=1.0)
+    y = crossbar_mxv_int8(xq, xs, wq, ws, bb=bb, bm=bm, bn=bn,
+                          interpret=interpret)
+    return y[:b, :m]

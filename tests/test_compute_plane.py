@@ -1,0 +1,230 @@
+"""Batched compute plane (core/compute_plane.py): backend matrix.
+
+Equivalence contract:
+  * ``reference`` vs ``numpy`` plane: bit-identical outputs and identical
+    cycle/message accounting on both engines and both schedules (einsum is
+    batch-invariant, so stacking MxVs changes no output bit);
+  * ``pallas`` plane (interpret mode): identical accounting; outputs within
+    atol once the crossbar matrix is dequantized-int8 (matmul rounding only);
+  * ``strict_float_order=False``: identical accounting, outputs within
+    np.allclose tolerance (float adds in avg-pool paths reassociate).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (Simulator, build_fig2_graph, build_lenet_like,
+                        build_resnet_block_chain, compile_model,
+                        dequantize_int8, make_chip)
+from repro.core.compute_plane import (NumpyPlane, PallasPlane, ReferencePlane,
+                                      make_descriptor, quantize_matrix,
+                                      resolve_plane)
+
+
+def _images(shape, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=shape).astype(np.float32) for _ in range(n)]
+
+
+def _case(name):
+    if name == "lenet":       # conv/relu/maxpool/gemm
+        return build_lenet_like(), make_chip(8, "banded"), (1, 12, 12)
+    if name == "resnet":      # conv/relu/add (skip connections)
+        return (build_resnet_block_chain(2), make_chip(8, "banded"),
+                (4, 8, 8))
+    raise KeyError(name)
+
+
+def _run(prog, chip, images, schedule, engine="event", **kw):
+    sim = Simulator(prog, chip, check_raw=True, engine=engine, **kw)
+    return sim.run(images, schedule=schedule)
+
+
+def _assert_stats_equal(a, b):
+    assert a.cycles == b.cycles
+    assert a.messages == b.messages
+    assert a.bytes_sent == b.bytes_sent
+    assert dict(a.busy) == dict(b.busy)
+    assert dict(a.sram_high_water) == dict(b.sram_high_water)
+
+
+# ------------------------------------------------------------ backend matrix
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+@pytest.mark.parametrize("case", ["lenet", "resnet"])
+def test_reference_vs_numpy_plane_bit_identical(case, schedule):
+    """The batching oracle: stacking MxVs through the numpy plane must not
+    change a single output bit vs the per-iteration reference loop, on
+    either engine."""
+    g, chip, shp = _case(case)
+    prog = compile_model(g, chip)
+    imgs = _images(shp, 3)
+    runs = {
+        (eng, plane): _run(prog, chip, imgs, schedule, engine=eng,
+                           compute_plane=plane)
+        for eng in ("event", "reference")
+        for plane in ("numpy", "reference")
+    }
+    base_out, base_stats = runs[("event", "numpy")]
+    for key, (outs, stats) in runs.items():
+        for a, b in zip(base_out, outs):
+            for v in a:
+                np.testing.assert_array_equal(a[v], b[v], err_msg=str(key))
+        _assert_stats_equal(base_stats, stats)
+
+
+def test_einsum_batch_invariance_is_what_makes_it_work():
+    """The property the numpy plane rests on, asserted directly: a stacked
+    einsum row equals the single-row call bit-for-bit (BLAS gemm does NOT
+    have this property — 1-row calls dispatch to gemv)."""
+    rng = np.random.default_rng(0)
+    plane = NumpyPlane()
+    for m_, n_, b_ in [(4, 36, 7), (8, 72, 64), (10, 128, 17)]:
+        desc = make_descriptor(rng.normal(size=(m_, n_)), "conv2d")
+        V = rng.normal(size=(b_, n_)).astype(np.float32)
+        Y = plane.mxv_batch(desc, V)
+        for i in (0, b_ // 2, b_ - 1):
+            np.testing.assert_array_equal(Y[i], plane.mxv_one(desc, V[i]))
+
+
+# ------------------------------------------------------------- pallas plane
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+def test_pallas_plane_interpret_equivalence(schedule):
+    """With a dequantized-int8 crossbar matrix, the pallas plane (interpret
+    mode on CPU) matches the numpy plane within matmul rounding: documented
+    atol 2e-5 / rtol 1e-5.  Accounting must be identical — planes change
+    value bits, never timing."""
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip, quantizer=dequantize_int8)
+    imgs = _images((4, 8, 8), 2)
+    o_np, s_np = _run(prog, chip, imgs, schedule, compute_plane="numpy")
+    o_pl, s_pl = _run(prog, chip, imgs, schedule, compute_plane="pallas")
+    for a, b in zip(o_np, o_pl):
+        for v in a:
+            np.testing.assert_allclose(a[v], b[v], rtol=1e-5, atol=2e-5)
+    _assert_stats_equal(s_np, s_pl)
+
+
+def test_pallas_int8_dac_plane():
+    """The fully-int8 path (DAC-quantized activations): int8 quantization
+    error dominates (~1% relative on this workload), timing identical."""
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip, quantizer=dequantize_int8)
+    imgs = _images((4, 8, 8), 1)
+    o_np, s_np = _run(prog, chip, imgs, "pipelined", compute_plane="numpy")
+    o_dac, s_dac = _run(prog, chip, imgs, "pipelined",
+                        compute_plane=PallasPlane(dac=True))
+    for a, b in zip(o_np, o_dac):
+        for v in a:
+            scale = np.abs(a[v]).max()
+            assert np.abs(a[v] - b[v]).max() < 0.05 * max(scale, 1.0)
+    _assert_stats_equal(s_np, s_dac)
+
+
+# ------------------------------------------------------- strict float order
+def _avgpool_graph():
+    """conv → relu → avgpool → conv → global_avgpool: both float-accumulating
+    DPU reductions in one pipeline."""
+    from repro.core import Graph
+    rng = np.random.default_rng(3)
+    g = Graph()
+    x = g.add_input("x", (4, 8, 8))
+    w1 = g.add_weight("w1", rng.normal(size=(4, 4, 3, 3), scale=0.3))
+    w2 = g.add_weight("w2", rng.normal(size=(6, 4, 3, 3), scale=0.3))
+    h = g.conv2d("conv1", x, w1, pad=1)
+    h = g.relu("relu1", h)
+    h = g.avgpool2d("pool1", h)
+    h = g.conv2d("conv2", h, w2)
+    out = g.global_avgpool("gap", h)
+    g.mark_output(out)
+    g.validate()
+    return g
+
+
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+def test_strict_float_order_flag(schedule):
+    """strict=True (default) keeps the reference's per-iteration float
+    accumulation order (bit-identical to the reference engine); strict=False
+    reassociates avg-pool adds: same timing, np.allclose outputs."""
+    g = _avgpool_graph()
+    chip = make_chip(6, "banded")
+    prog = compile_model(g, chip)
+    imgs = _images((4, 8, 8), 3)
+    o_ref, s_ref = _run(prog, chip, imgs, schedule, engine="reference")
+    o_strict, s_strict = _run(prog, chip, imgs, schedule,
+                              strict_float_order=True)
+    o_fast, s_fast = _run(prog, chip, imgs, schedule,
+                          strict_float_order=False)
+    for a, b in zip(o_ref, o_strict):
+        for v in a:
+            np.testing.assert_array_equal(a[v], b[v])
+    for a, b in zip(o_ref, o_fast):
+        for v in a:
+            np.testing.assert_allclose(a[v], b[v], rtol=1e-5, atol=1e-5)
+    _assert_stats_equal(s_ref, s_strict)
+    _assert_stats_equal(s_ref, s_fast)
+
+
+# --------------------------------------------------------------- descriptors
+def test_lowering_attaches_compute_descriptors():
+    g = build_lenet_like()
+    chip = make_chip(8, "banded")
+    prog = compile_model(g, chip)
+    seen = 0
+    for cfg in prog.cores.values():
+        if cfg.xbar_node is None:
+            assert cfg.compute is None
+            continue
+        seen += 1
+        d = cfg.compute
+        assert d is not None and d.op == cfg.xbar_node.op
+        assert d.wq.dtype == np.int8 and d.wq.shape == cfg.xbar_matrix.shape
+        wq, sc = quantize_matrix(cfg.xbar_matrix)
+        np.testing.assert_array_equal(d.wq, wq)
+        np.testing.assert_array_equal(d.wscale, sc)
+        # int8 round-trip stays within one quantization step per element
+        deq = d.wq.astype(np.float32) * d.wscale[:, None]
+        assert np.abs(deq - d.matrix).max() <= (d.wscale.max() / 2) + 1e-7
+    assert seen >= 3
+
+
+# ---------------------------------------------------------------- resolution
+def test_plane_resolution_rules():
+    assert resolve_plane("auto").name == "numpy"
+    assert resolve_plane("auto", mxv_fn=lambda m, v: m @ v).name == "reference"
+    assert resolve_plane("pallas").name == "pallas"
+    inst = NumpyPlane()
+    assert resolve_plane(inst) is inst
+    assert resolve_plane(
+        "numpy", mxv_batch_fn=lambda m, V: (m @ V.T).T).name == "custom"
+    with pytest.raises(ValueError):
+        resolve_plane("numpy", mxv_fn=lambda m, v: m @ v)
+    with pytest.raises(ValueError):
+        resolve_plane("no_such_backend")
+
+
+def test_custom_mxv_fn_uses_reference_loop():
+    """A custom mxv_fn (e.g. quantized) must flow through both engines
+    unchanged — auto-resolution falls back to the per-iteration loop."""
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip)
+    imgs = _images((4, 8, 8), 2)
+    calls = {"n": 0}
+
+    def noisy(m, v):
+        calls["n"] += 1
+        return (m @ v) * np.float32(1.0)
+
+    sim = Simulator(prog, chip, mxv_fn=noisy)
+    assert sim.plane.name == "reference"
+    o_ev, _ = sim.run(imgs)
+    assert calls["n"] > 0
+    o_ref, _ = Simulator(prog, chip, mxv_fn=noisy,
+                         engine="reference").run(imgs)
+    for a, b in zip(o_ev, o_ref):
+        for v in a:
+            np.testing.assert_array_equal(a[v], b[v])

@@ -29,9 +29,14 @@ from repro.core import pipeline
     n_items=st.integers(1, 8),
 )
 def test_schedule_matches_bruteforce(kinds, n_items):
+    """Three-way: the vectorized frontier-table schedule == the generated
+    LCU automata schedule == the explicit-dependency brute force."""
     sched = pipeline.derive_schedule(kinds, n_items)
     want = pipeline.reference_schedule_bruteforce(kinds, n_items)
     np.testing.assert_array_equal(sched.start, want)
+    automata = pipeline.derive_schedule_automata(kinds, n_items)
+    np.testing.assert_array_equal(automata.start, want)
+    np.testing.assert_array_equal(sched.table, automata.table)
 
 
 def test_pointwise_schedule_is_classic_pipeline():

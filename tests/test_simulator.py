@@ -172,6 +172,30 @@ def test_engine_equivalence(case, schedule):
     assert dict(s_ev.busy) == dict(s_ref.busy)
     assert s_ev.first_busy == s_ref.first_busy
     assert s_ev.last_busy == s_ref.last_busy
+    assert dict(s_ev.sram_high_water) == dict(s_ref.sram_high_water)
+
+
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+def test_sram_high_water_replay_matches_reference(schedule):
+    """The event engine replays end-of-cycle SRAM sampling from its buffer
+    lifetime log; multi-image pipelining is the case where same-cycle
+    create/retire overlaps used to over-report vs the reference's dense
+    per-cycle sampling (old ROADMAP open item)."""
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip)
+    imgs = _images((4, 8, 8), 6)
+    _, s_ref = Simulator(prog, chip, engine="reference").run(
+        imgs, schedule=schedule)
+    _, s_ev = Simulator(prog, chip, engine="event").run(
+        imgs, schedule=schedule)
+    assert dict(s_ev.sram_high_water) == dict(s_ref.sram_high_water)
+    # pipelining must actually overlap images for this to exercise anything
+    if schedule == "pipelined":
+        single = Simulator(prog, chip, engine="reference").run(
+            imgs[:1])[1].sram_high_water
+        assert any(s_ref.sram_high_water[c] > single[c]
+                   for c in single), "no multi-image overlap exercised"
 
 
 def test_event_engine_batched_mxv_hook():
