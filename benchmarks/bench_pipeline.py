@@ -22,7 +22,8 @@ import time
 import numpy as np
 
 from repro.core import (Simulator, build_lenet_like,
-                        build_resnet_block_chain, compile_model, make_chip)
+                        build_resnet_block_chain, compile_model, make_chip,
+                        make_mesh)
 
 
 def _run_engine(prog, chip, images, engine, plane):
@@ -87,6 +88,83 @@ def run(smoke: bool = False) -> list:
                 "speedup": round(seq.cycles / pipe.cycles, 2),
                 "pipe_util": round(pipe.mean_utilization(), 3),
                 "seq_util": round(seq.mean_utilization(), 3),
+                "messages": pipe.messages,
+                "event_ms": round(ev_wall * 1e3, 1),
+                "event_refplane_ms": round(pr1_wall * 1e3, 1),
+                "reference_ms": round(ref_wall * 1e3, 1),
+                "plane_speedup": round(pr1_wall / ev_wall, 1),
+                "engine_speedup": round(ref_wall / ev_wall, 1),
+            })
+    rows.extend(run_mesh(smoke))
+    return rows
+
+
+def _link_dicts(stats):
+    return {f"{a}->{b}": {"messages": ls.messages, "bytes": ls.bytes,
+                          "busy_cycles": ls.busy,
+                          "occupancy": round(stats.link_occupancy((a, b)), 4)}
+            for (a, b), ls in sorted(stats.links.items())}
+
+
+def run_mesh(smoke: bool = False) -> list:
+    """Multi-chip scale-out axis: a resnet chain too deep for one chip,
+    split across a chain ChipMesh by the chip-level partitioner.
+
+    Asserted per case: both engines bit-identical in outputs AND in
+    cycle/message/byte/busy/link accounting; the numpy and per-iteration
+    reference compute planes bit-identical in outputs; and the 2-chip run
+    bit-identical in outputs to the same graph compiled onto one chip wide
+    enough to hold it (scale-out must not change a single output bit).
+    """
+    rows = []
+    # resnet4 -> 8 partitions; 6-core chips force a cut (capacity), the DP
+    # places it at the cheapest block boundary
+    cases = [("resnet4", build_resnet_block_chain(4), 6, 2, (4, 8, 8))]
+    image_counts = (1,) if smoke else (1, 4, 8)
+    rng = np.random.default_rng(0)
+    for name, graph, cores_per_chip, n_chips, shp in cases:
+        chip = make_chip(cores_per_chip, "banded")
+        mesh = make_mesh(n_chips, chip=chip)
+        prog = compile_model(graph, chip, chips=n_chips)
+        wide = make_chip(cores_per_chip * n_chips, "banded")
+        prog1 = compile_model(graph, wide)
+        for n_images in image_counts:
+            images = [rng.normal(size=shp).astype(np.float32)
+                      for _ in range(n_images)]
+            ev_wall, eo_p, eo_s, pipe, seq = _run_engine(
+                prog, mesh, images, "event", "numpy")
+            pr1_wall, po_p, po_s, ppipe, pseq = _run_engine(
+                prog, mesh, images, "event", "reference")
+            ref_wall, ro_p, ro_s, rpipe, rseq = _run_engine(
+                prog, mesh, images, "reference", "numpy")
+            _, wo_p, wo_s, _, _ = _run_engine(
+                prog1, wide, images, "event", "numpy")
+            for mine, other, what in ((pipe, rpipe, "engine"),
+                                      (pipe, ppipe, "plane"),
+                                      (seq, rseq, "engine"),
+                                      (seq, pseq, "plane")):
+                assert mine.cycles == other.cycles, f"{what} cycle divergence"
+                assert mine.messages == other.messages, \
+                    f"{what} message divergence"
+            for a, b in ((pipe, rpipe), (seq, rseq)):
+                assert _link_dicts(a) == _link_dicts(b), "link divergence"
+            _assert_same_outputs(eo_p, ro_p, "event vs reference engine")
+            _assert_same_outputs(eo_s, ro_s, "event vs reference engine")
+            _assert_same_outputs(eo_p, po_p, "numpy vs reference plane")
+            _assert_same_outputs(eo_p, wo_p, "2-chip vs 1-chip outputs")
+            _assert_same_outputs(eo_s, wo_s, "2-chip vs 1-chip outputs")
+            rows.append({
+                "bench": "pipeline", "case": f"{name}/chips={n_chips}/"
+                                             f"n={n_images}",
+                "chips": n_chips,
+                "pipelined_cycles": pipe.cycles,
+                "sequential_cycles": seq.cycles,
+                "speedup": round(seq.cycles / pipe.cycles, 2),
+                "pipe_util": round(pipe.mean_utilization(), 3),
+                "seq_util": round(seq.mean_utilization(), 3),
+                "per_chip_util": [round(u, 3)
+                                  for u in pipe.chip_utilization(mesh)],
+                "links": _link_dicts(pipe),
                 "messages": pipe.messages,
                 "event_ms": round(ev_wall * 1e3, 1),
                 "event_refplane_ms": round(pr1_wall * 1e3, 1),

@@ -6,19 +6,24 @@ from .compute_plane import (ComputeDescriptor, ComputePlane, NumpyPlane,
                             make_descriptor, resolve_plane)
 from .graph import (Graph, build_fig2_graph, build_lenet_like,
                     build_resnet_block_chain, execute_reference)
-from .hwspec import ChipSpec, CoreSpec, make_chip
-from .mapping import MappingError, map_partitions
-from .partition import PartitionError, partition_graph
+from .hwspec import (ChipMesh, ChipSpec, CoreSpec, LinkSpec, make_chip,
+                     make_mesh)
+from .lowering import InterChipStream
+from .mapping import MappingError, map_partitions, map_partitions_mesh
+from .partition import (PartitionError, cut_bytes, partition_chips,
+                        partition_graph)
 from .poly import HAVE_ISL, FrontierTable, compile_frontier_table
-from .simulator import DeadlockError, RawViolation, SimStats, Simulator
+from .simulator import (DeadlockError, LinkStats, RawViolation, SimStats,
+                        Simulator)
 
 __all__ = [
     "Graph", "build_fig2_graph", "build_lenet_like",
     "build_resnet_block_chain", "execute_reference",
-    "ChipSpec", "CoreSpec", "make_chip",
-    "MappingError", "map_partitions",
-    "PartitionError", "partition_graph",
-    "DeadlockError", "RawViolation", "SimStats", "Simulator",
+    "ChipMesh", "ChipSpec", "CoreSpec", "LinkSpec", "make_chip", "make_mesh",
+    "InterChipStream",
+    "MappingError", "map_partitions", "map_partitions_mesh",
+    "PartitionError", "cut_bytes", "partition_chips", "partition_graph",
+    "DeadlockError", "LinkStats", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
     "compile_model", "serialize_config",
     "ComputeDescriptor", "ComputePlane", "NumpyPlane", "PallasPlane",

@@ -18,17 +18,35 @@ from typing import Dict, Optional
 import numpy as np
 
 from .graph import Graph
-from .hwspec import ChipSpec
+from .hwspec import ChipMesh, ChipSpec, make_mesh
 from .lowering import AcceleratorProgram, lower
-from .mapping import map_partitions
-from .partition import partition_graph
+from .mapping import map_partitions, map_partitions_mesh
+from .partition import partition_chips, partition_graph
 
 
-def compile_model(graph: Graph, chip: ChipSpec,
-                  quantizer=None) -> AcceleratorProgram:
+def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
+                  chips: int = 1, mesh: ChipMesh = None
+                  ) -> AcceleratorProgram:
+    """End-to-end compilation, optionally scaled out to a multi-chip mesh.
+
+    ``chips=1`` (default) is the paper's single-chip flow, unchanged.
+    ``chips=N`` builds a chain :class:`ChipMesh` of N copies of ``chip``
+    (or uses ``mesh`` verbatim when given) and adds the chip-level pass:
+    ``partition_chips`` cuts the partition chain across chips minimizing
+    cross-chip bytes, ``map_partitions_mesh`` places each chip's partitions
+    independently, and ``lower`` materializes the cut edges as inter-chip
+    DMA streams — the LCU frontier tables are untouched (the polyhedral
+    control logic is agnostic to *where* a dependence edge lands).
+    """
+    if mesh is None and chips > 1:
+        mesh = make_mesh(chips, chip=chip)
     pg = partition_graph(graph)
-    mapping = map_partitions(pg, chip)
-    return lower(pg, mapping, quantizer=quantizer)
+    if mesh is None:
+        mapping = map_partitions(pg, chip)
+        return lower(pg, mapping, quantizer=quantizer)
+    chip_assign = partition_chips(pg, mesh)
+    mapping = map_partitions_mesh(pg, mesh, chip_assign)
+    return lower(pg, mapping, quantizer=quantizer, mesh=mesh)
 
 
 def serialize_config(prog: AcceleratorProgram) -> str:
@@ -48,11 +66,24 @@ def serialize_config(prog: AcceleratorProgram) -> str:
                          s_code=lc.gen_src)
                  for v, lc in cfg.lcu.items()},
         )
-    return json.dumps(dict(
+    bundle = dict(
         cores=cores,
         gcu=dict(input=prog.gcu.input_value,
                  input_shape=list(prog.gcu.input_shape),
                  dst_cores=prog.gcu.dst_cores,
                  outputs={k: list(v) for k, v in prog.gcu.outputs.items()}),
         mapping={str(k): v for k, v in prog.mapping.items()},
-    ), indent=2)
+    )
+    if prog.mesh is not None:
+        bundle["mesh"] = dict(
+            n_chips=prog.mesh.n_chips,
+            cores_per_chip=prog.mesh.chip.n_cores,
+            links=sorted(list(e) for e in prog.mesh.links),
+            link=dict(latency=prog.mesh.link.latency,
+                      width_bytes=prog.mesh.link.width_bytes),
+            dma_streams=[dict(value=s.value, src_core=s.src_core,
+                              dst_core=s.dst_core, src_chip=s.src_chip,
+                              dst_chip=s.dst_chip)
+                         for s in prog.dma_streams],
+        )
+    return json.dumps(bundle, indent=2)

@@ -225,6 +225,12 @@ def resolve_plane(spec="auto", mxv_fn=None, mxv_batch_fn=None) -> ComputePlane:
     if mxv_batch_fn is not None:
         return CustomPlane(mxv_fn, mxv_batch_fn)
     if isinstance(spec, ComputePlane):
+        if mxv_fn is not None:
+            raise ValueError(
+                f"compute_plane={type(spec).__name__} instance cannot honor "
+                f"a separate mxv_fn (the instance's own MxV wins); construct "
+                f"ReferencePlane(mxv_fn) or pass a matching mxv_batch_fn "
+                f"hook instead")
         return spec
     if spec == "auto":
         spec = "reference" if mxv_fn is not None else "numpy"

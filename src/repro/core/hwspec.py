@@ -85,3 +85,112 @@ def make_chip(n_cores: int, topology: str = "all_to_all", width: int = 256,
     edges = builders[topology]()
     return ChipSpec(n_cores=n_cores, core=CoreSpec(width, sram_bytes),
                     edges=edges, **kw)
+
+
+# ------------------------------------------------------------ multi-chip mesh
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One bounded inter-chip link.
+
+    ``latency`` — extra cycles a message spends on the wire beyond the
+    intra-chip SRAM-write-at-cycle+1 (paper §2); ``width_bytes`` — bytes the
+    link moves per cycle, so a message of ``n`` bytes adds
+    ``ceil(n / width_bytes) - 1`` serialization cycles on top of the latency.
+    Both are per-message and deterministic (no cross-stream queueing), which
+    is what lets the event-driven and dense simulator engines stay
+    bit-identical on multi-chip programs.
+    """
+
+    latency: int = 4
+    width_bytes: int = 64
+
+    def beats(self, nbytes: int) -> int:
+        """Cycles the link is occupied by one message of ``nbytes`` — the
+        single definition both the delay model and the occupancy accounting
+        (``LinkStats.busy``) derive from."""
+        return -(-int(nbytes) // self.width_bytes)
+
+    def transfer_delay(self, nbytes: int) -> int:
+        """Extra arrival cycles for one message of ``nbytes`` on this link."""
+        return self.latency + max(0, self.beats(nbytes) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipMesh:
+    """N homogeneous CM chips joined by bounded directed links.
+
+    Cores get *global* ids: core ``i`` of chip ``c`` is
+    ``c * chip.n_cores + i``, so a multi-chip ``AcceleratorProgram`` looks
+    exactly like a wide single-chip one to the mapper/lowering, with the
+    link model applied only to messages whose endpoints live on different
+    chips.  GCU/GMEM host I/O is chip-local (each chip has its own host
+    interface, the paper's global-memory abstraction), so mesh links carry
+    only core-to-core activation streams (the cut edges of the partition
+    graph).
+    """
+
+    chip: ChipSpec
+    n_chips: int
+    links: "frozenset[Edge]"
+    link: LinkSpec = LinkSpec()
+
+    @property
+    def n_cores_total(self) -> int:
+        return self.n_chips * self.chip.n_cores
+
+    @property
+    def dma_pixels_per_cycle(self) -> int:
+        return self.chip.dma_pixels_per_cycle
+
+    def chip_of(self, core: int) -> int:
+        return core // self.chip.n_cores
+
+    def local_core(self, core: int) -> int:
+        return core % self.chip.n_cores
+
+    def global_core(self, chip_idx: int, local: int) -> int:
+        return chip_idx * self.chip.n_cores + local
+
+    def connected(self, a: int, b: int) -> bool:
+        return a == b or (a, b) in self.links
+
+    def link_between(self, a: int, b: int) -> LinkSpec:
+        if (a, b) not in self.links:
+            raise KeyError(f"no link between chips {a} and {b}")
+        return self.link
+
+    def max_edge_span(self) -> int:
+        """Largest forward hop ``h`` with every ``(c, c+h)`` link present."""
+        h = 0
+        while h + 1 < self.n_chips and all(
+                (c, c + h + 1) in self.links
+                for c in range(self.n_chips - h - 1)):
+            h += 1
+        return h
+
+
+def make_mesh(n_chips: int, chip: ChipSpec = None, topology: str = "chain",
+              link_latency: int = 4, link_width_bytes: int = 64,
+              k: int = 2, **chip_kw) -> ChipMesh:
+    """``n_chips`` copies of ``chip`` joined by ``topology`` links.
+
+    ``topology`` is a chip-level variant of the intra-chip builders:
+    ``chain`` (forward pipeline, the default — layer chains only ever send
+    forward), ``ring``, ``banded`` (forward skips of depth ``k``, for deeper
+    residual pipelines, after the Parallel-Prism construction),
+    ``all_to_all``.  Remaining keywords build the chip when none is given.
+    """
+    if chip is None:
+        chip = make_chip(chip_kw.pop("n_cores", 8),
+                         chip_kw.pop("chip_topology", "all_to_all"),
+                         **chip_kw)
+    elif chip_kw:
+        raise TypeError(f"chip given AND chip kwargs {sorted(chip_kw)}")
+    builders = {
+        "all_to_all": lambda: all_to_all(n_chips),
+        "chain": lambda: chain(n_chips),
+        "ring": lambda: ring(n_chips),
+        "banded": lambda: banded(n_chips, k),
+    }
+    return ChipMesh(chip=chip, n_chips=n_chips, links=builders[topology](),
+                    link=LinkSpec(link_latency, link_width_bytes))

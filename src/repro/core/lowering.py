@@ -22,6 +22,7 @@ import numpy as np
 
 from . import poly
 from .compute_plane import ComputeDescriptor, make_descriptor
+from .hwspec import ChipMesh, LinkSpec
 from .poly import isl  # islpy when installed, the finite fisl backend otherwise
 from .graph import CROSSBAR_OPS, Graph, Node
 from .partition import GCU_PARTITION, PartitionedGraph
@@ -188,11 +189,36 @@ class GcuConfig:
 
 
 @dataclasses.dataclass
+class InterChipStream:
+    """One cut edge lowered to an inter-chip DMA stream.
+
+    The producer core pushes each finalized chunk of ``value`` onto the
+    ``link``; the consumer core's LCU snoops the (delayed) SRAM writes
+    exactly as it does intra-chip ones — the unlock conditions are the same
+    ``poly.compile_frontier_table`` ramps (``LcuArrayConfig.table``), fed
+    with link-delayed arrival cycles instead of ``send + 1``.
+    """
+
+    value: str
+    src_core: int
+    dst_core: int
+    src_chip: int
+    dst_chip: int
+    link: LinkSpec
+
+
+@dataclasses.dataclass
 class AcceleratorProgram:
     cores: Dict[int, CoreConfig]
     gcu: GcuConfig
-    mapping: Dict[int, int]              # partition -> core
+    mapping: Dict[int, int]              # partition -> core (global id)
     pgraph: PartitionedGraph
+    mesh: Optional[ChipMesh] = None      # multi-chip scale-out (None: 1 chip)
+    dma_streams: List[InterChipStream] = dataclasses.field(
+        default_factory=list)
+
+    def chip_of(self, core: int) -> int:
+        return self.mesh.chip_of(core) if self.mesh is not None else 0
 
 
 class LoweringError(Exception):
@@ -212,11 +238,20 @@ def _conv_iter_bounds(graph: Graph, node: Node) -> Tuple[int, int]:
 
 
 def lower(pg: PartitionedGraph, mapping: Dict[int, int],
-          quantizer=None) -> AcceleratorProgram:
+          quantizer=None, mesh: Optional[ChipMesh] = None
+          ) -> AcceleratorProgram:
     """Produce per-core configurations (paper's 'lowering' step).
 
     ``quantizer(w) -> w'`` optionally models crossbar programming noise /
     quantization; identity by default.
+
+    ``mesh``: multi-chip scale-out.  ``mapping`` then holds *global* core
+    ids; cut edges (sends whose destination lives on another chip) are
+    additionally materialized as :class:`InterChipStream` DMA descriptors.
+    The LCU configuration is chip-agnostic by construction — the Appendix-A
+    ``S`` relation only sees array coordinates, so a consumer's frontier
+    table enforces a cross-chip dependency with the same compiled ramp as an
+    intra-chip one.
     """
     graph = pg.graph
     aliases: Dict[str, str] = {}
@@ -376,4 +411,20 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
     gcu = GcuConfig(input_value=inp, input_shape=graph.values[inp].shape,
                     dst_cores=dst_cores,
                     outputs={o: graph.values[o].shape for o in graph.outputs})
-    return AcceleratorProgram(cores=cores, gcu=gcu, mapping=mapping, pgraph=pg)
+
+    # ---- inter-chip DMA streams: every send with a cross-chip destination
+    dma_streams: List[InterChipStream] = []
+    if mesh is not None:
+        for cid, cfg in cores.items():
+            src_chip = mesh.chip_of(cid)
+            for spec in cfg.sends:
+                for dst in spec.dst_cores:
+                    dst_chip = mesh.chip_of(dst)
+                    if dst_chip == src_chip:
+                        continue
+                    dma_streams.append(InterChipStream(
+                        value=spec.value, src_core=cid, dst_core=dst,
+                        src_chip=src_chip, dst_chip=dst_chip,
+                        link=mesh.link_between(src_chip, dst_chip)))
+    return AcceleratorProgram(cores=cores, gcu=gcu, mapping=mapping,
+                              pgraph=pg, mesh=mesh, dma_streams=dma_streams)

@@ -27,8 +27,8 @@ except ModuleNotFoundError:  # gate the dep: complete backtracking search
     HAVE_Z3 = False
 
 from .graph import Graph
-from .hwspec import ChipSpec
-from .partition import GCU_PARTITION, PartitionedGraph
+from .hwspec import ChipMesh, ChipSpec
+from .partition import GCU_PARTITION, PartitionedGraph, partition_chips
 
 
 class MappingError(Exception):
@@ -81,23 +81,60 @@ def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
     """partition idx -> core id, via Z3 (or exhaustive backtracking when the
     solver is unavailable).  Raises MappingError when UNSAT."""
     check_resources(pg, chip)
-    n_parts = len(pg.partitions)
+    part_ids = list(range(len(pg.partitions)))
+    edges = [(s, d) for (s, d) in pg.edges if s != GCU_PARTITION]
+    return _solve_chip(part_ids, edges, chip, timeout_ms)
+
+
+def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
+                        chip_assign: Optional[Dict[int, int]] = None,
+                        timeout_ms: int = 30_000) -> Dict[int, int]:
+    """partition idx -> *global* core id over a multi-chip mesh.
+
+    Each chip's partitions are mapped onto that chip's cores independently
+    (same constraint set as the single-chip problem); only *intra-chip*
+    partition edges constrain the intra-chip placement — cut edges arrive
+    through the inter-chip DMA path straight into the consumer core's SRAM,
+    exactly like GCU input ("the GCU reaches every core through GMEM"), so
+    they impose no interconnect constraint inside either chip.
+    """
+    check_resources(pg, mesh.chip)
+    if chip_assign is None:
+        chip_assign = partition_chips(pg, mesh)
+    mapping: Dict[int, int] = {}
+    for c in range(mesh.n_chips):
+        parts = sorted(p for p, cc in chip_assign.items() if cc == c)
+        if not parts:
+            continue
+        edges = [(s, d) for (s, d) in pg.edges
+                 if s != GCU_PARTITION
+                 and chip_assign[s] == c and chip_assign[d] == c]
+        local = _solve_chip(parts, edges, mesh.chip, timeout_ms)
+        for p, lc in local.items():
+            mapping[p] = mesh.global_core(c, lc)
+    return mapping
+
+
+def _solve_chip(part_ids, edges, chip: ChipSpec,
+                timeout_ms: int = 30_000) -> Dict[int, int]:
+    """Place ``part_ids`` on one chip's cores: distinct cores, every edge in
+    ``edges`` on an interconnect link.  Z3 when available, else exhaustive
+    backtracking (partition graphs are small, so the search is exact)."""
+    n_parts = len(part_ids)
     if n_parts > chip.n_cores:
         raise MappingError(f"{n_parts} partitions > {chip.n_cores} cores")
     if not HAVE_Z3:
-        return _map_backtracking(pg, chip)
+        return _map_backtracking(part_ids, edges, chip)
 
     solver = z3.Solver()
     solver.set("timeout", timeout_ms)
-    loc = [z3.Int(f"loc_{i}") for i in range(n_parts)]
-    for v in loc:
+    loc = {p: z3.Int(f"loc_{p}") for p in part_ids}
+    for v in loc.values():
         solver.add(v >= 0, v < chip.n_cores)
-    solver.add(z3.Distinct(*loc))
+    solver.add(z3.Distinct(*loc.values()))
 
     edge_pairs = sorted(chip.edges)
-    for (src, dst) in pg.edges:
-        if src == GCU_PARTITION:
-            continue  # GCU reaches every core through GMEM
+    for (src, dst) in edges:
         solver.add(z3.Or(*[
             z3.And(loc[src] == a, loc[dst] == b) for (a, b) in edge_pairs
         ]))
@@ -107,21 +144,18 @@ def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
             f"Z3: no valid mapping of {n_parts} partitions onto "
             f"{chip.n_cores}-core chip with {len(chip.edges)} links")
     model = solver.model()
-    return {i: model[loc[i]].as_long() for i in range(n_parts)}
+    return {p: model[loc[p]].as_long() for p in part_ids}
 
 
-def _map_backtracking(pg: PartitionedGraph, chip: ChipSpec) -> Dict[int, int]:
+def _map_backtracking(part_ids, edges, chip: ChipSpec) -> Dict[int, int]:
     """Complete DFS over core assignments with the same constraint set as the
     Z3 encoding: distinct cores, every partition edge on an interconnect link.
-    Partition graphs are small (one per crossbar op), so exhaustive search is
-    exact: no solution found == UNSAT."""
-    n_parts = len(pg.partitions)
-    # all non-GCU edges go forward (src < dst, partition.py invariant 2), so
-    # when assigning dst every src is already placed
-    preds: Dict[int, list] = {i: [] for i in range(n_parts)}
-    for (src, dst) in pg.edges:
-        if src == GCU_PARTITION:
-            continue  # GCU reaches every core through GMEM
+    No solution found == UNSAT."""
+    order = sorted(part_ids)
+    # all edges go forward (src < dst, partition.py invariant 2), so when
+    # assigning dst every src is already placed
+    preds: Dict[int, list] = {p: [] for p in order}
+    for (src, dst) in edges:
         preds[dst].append(src)
     assign: Dict[int, int] = {}
     used = set()
@@ -132,15 +166,16 @@ def _map_backtracking(pg: PartitionedGraph, chip: ChipSpec) -> Dict[int, int]:
                 return False
         return True
 
-    def dfs(pidx: int) -> bool:
-        if pidx == n_parts:
+    def dfs(k: int) -> bool:
+        if k == len(order):
             return True
+        pidx = order[k]
         for core in range(chip.n_cores):
             if core in used or not ok(pidx, core):
                 continue
             assign[pidx] = core
             used.add(core)
-            if dfs(pidx + 1):
+            if dfs(k + 1):
                 return True
             used.discard(core)
             del assign[pidx]
@@ -148,6 +183,6 @@ def _map_backtracking(pg: PartitionedGraph, chip: ChipSpec) -> Dict[int, int]:
 
     if not dfs(0):
         raise MappingError(
-            f"no valid mapping of {n_parts} partitions onto "
+            f"no valid mapping of {len(order)} partitions onto "
             f"{chip.n_cores}-core chip with {len(chip.edges)} links")
     return dict(assign)

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
 from .graph import CROSSBAR_OPS, Graph, Node
+from .hwspec import ChipMesh
 
 GCU_PARTITION = -1  # virtual partition for graph inputs (fed by the GCU)
 
@@ -109,3 +110,147 @@ def partition_graph(graph: Graph) -> PartitionedGraph:
     return PartitionedGraph(graph=graph, partitions=partitions,
                             node_part=node_part, value_part=value_part,
                             edges=edges)
+
+
+# -------------------------------------------------------- multi-chip scale-out
+def cut_bytes(pg: PartitionedGraph, boundary: int) -> int:
+    """Bytes of every partition edge crossing the cut before ``boundary``
+    (i.e. edges (src, dst) with src < boundary <= dst).  GCU edges are host
+    I/O, never cut traffic."""
+    g = pg.graph
+    total = 0
+    for (src, dst), vals in pg.edges.items():
+        if src == GCU_PARTITION:
+            continue
+        if src < boundary <= dst:
+            total += sum(g.values[v].nbytes for v in vals)
+    return total
+
+
+def partition_chips(pg: PartitionedGraph, mesh: ChipMesh) -> Dict[int, int]:
+    """Split the partition chain across the mesh's chips: partition -> chip.
+
+    Contract (the chip-level pass the per-chip mapper builds on):
+      * assignments are *contiguous* in partition order — every partition
+        edge goes forward (partition.py invariant 2), so contiguous segments
+        keep the chip-level graph acyclic and forward, matching the mesh's
+        chain/banded link direction;
+      * each chip holds at most ``mesh.chip.n_cores`` partitions (one core
+        per partition, paper §3.1);
+      * cut positions minimize total cross-chip traffic: the sum over chosen
+        boundaries of the bytes crossing them (an edge spanning ``h`` chips
+        is counted on all ``h`` links it rides, i.e. the objective is
+        bytes x hops);
+      * a cut is only legal where every edge it splits lands on an existing
+        link.  The DP prunes most violations (adjacent-boundary spans on
+        chain meshes; empty middle chips and multi-hop topologies escape
+        the prune); its optimum is always validated exactly against
+        ``mesh.links``, and on failure an exhaustive sweep over all
+        contiguous splits finds the cheapest *feasible* one —
+        ``PartitionError`` only when none exists.
+    """
+    n_parts = len(pg.partitions)
+    n_chips = mesh.n_chips
+    cap = mesh.chip.n_cores
+    if n_parts > n_chips * cap:
+        raise PartitionError(
+            f"{n_parts} partitions > {n_chips} chips x {cap} cores")
+    fwd_edges = [(s, d) for (s, d) in pg.edges if s != GCU_PARTITION]
+    max_span = max(1, mesh.max_edge_span())
+
+    bcost = [cut_bytes(pg, i) for i in range(n_parts + 1)]
+
+    def span_ok(lo: int, hi: int) -> bool:
+        """Adjacent-boundary pruning: no edge may both enter segment
+        [lo, hi) from before ``lo`` and leave it past ``hi`` when edges are
+        limited to a single boundary (chain meshes).  Multi-hop meshes
+        (max_span > 1) are not pruned here — the exact feasibility pass
+        below handles them."""
+        if max_span > 1:
+            return True
+        return not any(s < lo and d >= hi for (s, d) in fwd_edges)
+
+    INF = float("inf")
+    # f[c][i] = min cost with partitions [0, i) on chips [0, c)
+    f = [[INF] * (n_parts + 1) for _ in range(n_chips + 1)]
+    back = [[-1] * (n_parts + 1) for _ in range(n_chips + 1)]
+    f[0][0] = 0.0
+    for c in range(1, n_chips + 1):
+        for i in range(n_parts + 1):
+            # descending j: on byte ties prefer the largest previous
+            # boundary, i.e. fill earlier chips and leave trailing chips
+            # empty (a chain that fits on one chip stays on chip 0)
+            for j in range(i, max(0, i - cap) - 1, -1):
+                if f[c - 1][j] == INF:
+                    continue
+                if j < i and not span_ok(j, i):
+                    continue
+                cost = f[c - 1][j] + (bcost[j] if 0 < j < n_parts else 0)
+                if cost < f[c][i]:
+                    f[c][i] = cost
+                    back[c][i] = j
+    if f[n_chips][n_parts] == INF:
+        assign = _cheapest_feasible_split(pg, mesh, fwd_edges, bcost)
+        if assign is None:
+            raise PartitionError(
+                f"no feasible contiguous split of {n_parts} partitions over "
+                f"{n_chips} chips (capacity {cap}, max edge span {max_span})")
+        return assign
+
+    bounds = []
+    i = n_parts
+    for c in range(n_chips, 0, -1):
+        j = back[c][i]
+        bounds.append((j, i))
+        i = j
+    bounds.reverse()
+    assign: Dict[int, int] = {}
+    for chip_idx, (lo, hi) in enumerate(bounds):
+        for p in range(lo, hi):
+            assign[p] = chip_idx
+
+    if _links_ok(fwd_edges, assign, mesh):
+        return assign
+    # The byte-minimal DP split stretches some edge over a missing link
+    # (multi-hop meshes, or a chain split with an empty middle chip — the
+    # span prune only sees adjacent boundary pairs).  Fall back to the
+    # cheapest *feasible* contiguous split, found exhaustively (partition
+    # chains are small: one partition per crossbar op).
+    assign = _cheapest_feasible_split(pg, mesh, fwd_edges, bcost)
+    if assign is None:
+        raise PartitionError(
+            f"no contiguous split of {n_parts} partitions over {n_chips} "
+            f"chips satisfies the link topology "
+            f"(mesh links: {sorted(mesh.links)})")
+    return assign
+
+
+def _links_ok(fwd_edges, assign: Dict[int, int], mesh: ChipMesh) -> bool:
+    return all(mesh.connected(assign[s], assign[d]) for (s, d) in fwd_edges)
+
+
+def _cheapest_feasible_split(pg: PartitionedGraph, mesh: ChipMesh,
+                             fwd_edges, bcost) -> Optional[Dict[int, int]]:
+    """Exhaustive sweep over non-decreasing boundary tuples: the cheapest
+    capacity-respecting, link-feasible contiguous split, or None."""
+    import itertools
+
+    n_parts = len(pg.partitions)
+    n_chips = mesh.n_chips
+    cap = mesh.chip.n_cores
+    best, best_cost = None, float("inf")
+    for cuts in itertools.combinations_with_replacement(
+            range(n_parts + 1), n_chips - 1):
+        bounds = [0] + list(cuts) + [n_parts]
+        if any(hi - lo > cap for lo, hi in zip(bounds, bounds[1:])):
+            continue
+        assign = {}
+        for chip_idx, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+            for p in range(lo, hi):
+                assign[p] = chip_idx
+        if not _links_ok(fwd_edges, assign, mesh):
+            continue
+        cost = sum(bcost[b] for b in cuts if 0 < b < n_parts)
+        if cost < best_cost:
+            best, best_cost = assign, cost
+    return best

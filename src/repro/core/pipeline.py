@@ -194,8 +194,9 @@ def pipeline_apply(stage_fns: List[Callable], params_stacked,
     """
     import jax
     import jax.numpy as jnp
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
 
     n_stages, n_ticks = schedule.table.shape
     n_items = xs.shape[0]
@@ -237,7 +238,7 @@ def pipeline_apply(stage_fns: List[Callable], params_stacked,
     pspec = jax.tree.map(lambda _: P(axis), params_stacked)
     out = shard_map(body, mesh=mesh,
                     in_specs=(pspec, P()), out_specs=P(),
-                    check_rep=False)(params_stacked, xs)
+                    check=False)(params_stacked, xs)
     return out
 
 

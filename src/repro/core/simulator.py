@@ -88,7 +88,7 @@ import numpy as np
 
 from .compute_plane import descriptor_for, resolve_plane
 from .lowering import AcceleratorProgram, CoreConfig, SendSpec
-from .hwspec import ChipSpec
+from .hwspec import ChipMesh, ChipSpec
 from . import poly
 
 Point = Tuple[int, ...]
@@ -116,6 +116,24 @@ class Message:
 
 
 @dataclasses.dataclass
+class LinkStats:
+    """Per inter-chip link accounting (src_chip, dst_chip) -> this record.
+
+    ``busy`` counts occupancy cycles: each message holds the link for
+    ``ceil(nbytes / width_bytes)`` cycles, so ``busy / SimStats.cycles`` is
+    the link's *offered load* — the model serializes each message's bytes
+    but not messages against each other, so a value above 1.0 flags a link
+    that real hardware would have to queue (the scale-out diagnostic).
+    Counted at send time, exactly like ``SimStats.messages`` — both engines
+    must agree bit-for-bit.
+    """
+
+    messages: int = 0
+    bytes: int = 0
+    busy: int = 0
+
+
+@dataclasses.dataclass
 class SimStats:
     cycles: int = 0
     busy: Dict[int, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
@@ -125,6 +143,8 @@ class SimStats:
         default_factory=lambda: defaultdict(int))
     first_busy: Dict[int, int] = dataclasses.field(default_factory=dict)
     last_busy: Dict[int, int] = dataclasses.field(default_factory=dict)
+    links: Dict[Tuple[int, int], LinkStats] = dataclasses.field(
+        default_factory=dict)
 
     def utilization(self, core: int) -> float:
         if core not in self.first_busy:
@@ -135,6 +155,20 @@ class SimStats:
     def mean_utilization(self) -> float:
         us = [self.utilization(c) for c in self.busy]
         return float(np.mean(us)) if us else 0.0
+
+    def link_occupancy(self, link: Tuple[int, int]) -> float:
+        if link not in self.links or not self.cycles:
+            return 0.0
+        return self.links[link].busy / self.cycles
+
+    def chip_utilization(self, mesh: ChipMesh) -> List[float]:
+        """Mean core utilization per chip (cores that never ran count 0),
+        averaged over all ``mesh.chip.n_cores`` physical cores."""
+        per_chip: Dict[int, float] = defaultdict(float)
+        for core in self.busy:
+            per_chip[mesh.chip_of(core)] += self.utilization(core)
+        return [per_chip[c] / mesh.chip.n_cores
+                for c in range(mesh.n_chips)]
 
 
 class _CoreImageState:
@@ -187,17 +221,37 @@ class Simulator:
     identical in timing.
     """
 
-    def __init__(self, program: AcceleratorProgram, chip: ChipSpec,
+    def __init__(self, program: AcceleratorProgram, chip,
                  mxv_fn=None, check_raw: bool = True, engine: str = "event",
                  mxv_batch_fn=None, compute_plane="auto",
                  strict_float_order: bool = True):
         assert engine in ("event", "reference"), engine
         self.prog = program
-        self.chip = chip
+        # ``chip`` may be a single ChipSpec or a ChipMesh; a mesh compiled
+        # into the program wins (its link model shaped the lowering).
+        self.mesh: Optional[ChipMesh] = (
+            program.mesh if program.mesh is not None
+            else (chip if isinstance(chip, ChipMesh) else None))
+        self.chip: ChipSpec = self.mesh.chip if self.mesh is not None \
+            else chip
         self.plane = resolve_plane(compute_plane, mxv_fn, mxv_batch_fn)
         self.strict_float_order = strict_float_order
         self.check_raw = check_raw
         self.engine = engine
+
+    def _link_for(self, src_core: int, dst_core: int):
+        """(extra_delay_fn, link_key) for a core->core message, or (None,
+        None) intra-chip.  GCU/GMEM host I/O never rides a mesh link."""
+        if self.mesh is None:
+            return None, None
+        ca, cb = self.mesh.chip_of(src_core), self.mesh.chip_of(dst_core)
+        if ca == cb:
+            return None, None
+        return self.mesh.link_between(ca, cb), (ca, cb)
+
+    @staticmethod
+    def _occupancy(link, nbytes: int) -> int:
+        return link.beats(nbytes)
 
     # ------------------------------------------------------------------- run
     def run(self, images: List[np.ndarray], schedule: str = "pipelined",
@@ -289,7 +343,8 @@ class Simulator:
                 if schedule == "sequential" and not self._producers_done(
                         cfg, img, core_done, part_core, gcu_img, gcu_pix):
                     continue
-                msgs = self._execute_iteration(cfg, st, it, img, cycle)
+                msgs = self._execute_iteration(cfg, st, it, img, cycle,
+                                               stats)
                 inflight.extend(msgs)
                 stats.messages += len(msgs)
                 stats.bytes_sent += sum(m.payload.nbytes for m in msgs)
@@ -421,7 +476,8 @@ class Simulator:
         return need
 
     def _execute_iteration(self, cfg: CoreConfig, st: _CoreImageState,
-                           it: Point, img: int, cycle: int) -> List[Message]:
+                           it: Point, img: int, cycle: int,
+                           stats: Optional[SimStats] = None) -> List[Message]:
         if self.check_raw and cfg.lcu:
             self._raw_check(cfg, st, it)
         env: Dict[str, np.ndarray] = {}
@@ -503,8 +559,17 @@ class Simulator:
 
         def emit(spec: SendSpec, kind: str, loc: Point, payload: np.ndarray):
             for dst in spec.dst_cores:
-                msgs.append(Message(cycle + 1, dst, img, spec.value, kind,
-                                    loc, payload.copy()))
+                link, key = self._link_for(cfg.core_id, dst)
+                delay = 0
+                if link is not None:
+                    delay = link.transfer_delay(payload.nbytes)
+                    if stats is not None:
+                        ls = stats.links.setdefault(key, LinkStats())
+                        ls.messages += 1
+                        ls.bytes += payload.nbytes
+                        ls.busy += self._occupancy(link, payload.nbytes)
+                msgs.append(Message(cycle + 1 + delay, dst, img, spec.value,
+                                    kind, loc, payload.copy()))
             if spec.to_gmem:
                 msgs.append(Message(cycle + 1, -1, img, spec.value, kind,
                                     loc, payload.copy()))
@@ -734,6 +799,8 @@ class _EventEngine:
         self.log_cycle: List[np.ndarray] = []
         self.log_msgs: List[np.ndarray] = []
         self.log_bytes: List[np.ndarray] = []
+        # inter-chip link log: (link key, send cycles, row bytes, occupancy)
+        self.log_link: List[Tuple[Tuple[int, int], np.ndarray, int, int]] = []
         self.gcu_log: List[Tuple[np.ndarray, int]] = []
         # SRAM buffer-lifetime events: (cycle, core, delta_bytes, delta_count)
         # replayed in _assemble_stats as the reference's end-of-cycle samples.
@@ -829,6 +896,14 @@ class _EventEngine:
                 stats.busy[int(cid)] = int(sel.sum())
                 stats.first_busy[int(cid)] = int(cycles[sel].min())
                 stats.last_busy[int(cid)] = int(cycles[sel].max())
+        for key, send_cycles, row_bytes, occ in self.log_link:
+            n = int((send_cycles <= self.t_end).sum())
+            if not n:
+                continue
+            ls = stats.links.setdefault(key, LinkStats())
+            ls.messages += n
+            ls.bytes += n * row_bytes
+            ls.busy += n * occ
         self._replay_high_water(stats)
         return stats
 
@@ -1184,19 +1259,26 @@ class _EventEngine:
                          iter_idx):
             n_targets = len(spec.dst_cores) + (1 if spec.to_gmem else 0)
             per_it = n_targets * payload.shape[1] * payload.itemsize
+            row_bytes = payload.shape[1] * payload.itemsize
             if iter_idx is None:             # every iteration sends one row
                 msgs_it[...] += n_targets
                 bytes_it[...] += per_it
             else:
                 msgs_it[iter_idx] += n_targets
                 bytes_it[iter_idx] += per_it
-            first = int(arrive[0])
             for dst in spec.dst_cores:
-                self._push(first, _PH_DELIVER, 0, "stream",
+                link, key = self.sim._link_for(cid, dst)
+                arr = arrive
+                if link is not None:         # cross-chip: link-delayed rows
+                    arr = np.asarray(arrive) + link.transfer_delay(row_bytes)
+                    self.log_link.append(
+                        (key, np.asarray(arrive) - 1, row_bytes,
+                         Simulator._occupancy(link, row_bytes)))
+                self._push(int(arr[0]), _PH_DELIVER, 0, "stream",
                            _Stream(dst, img, spec.value, kind, locs, payload,
-                                   arrive))
+                                   arr))
             if spec.to_gmem:
-                self._push(first, _PH_DELIVER, 0, "stream",
+                self._push(int(arrive[0]), _PH_DELIVER, 0, "stream",
                            _Stream(-1, img, spec.value, kind, locs, payload,
                                    arrive))
 

@@ -1,8 +1,11 @@
+from .compat import HAS_NATIVE_SHARD_MAP, shard_map
 from .compression import (CompressionSpec, quantize_blockwise,
                           dequantize_blockwise, topk_sparsify,
                           topk_densify, init_error_feedback,
-                          compress_with_feedback, hierarchical_psum)
-from .overlap import ring_all_reduce, make_accum_train_step
+                          compress_with_feedback, hierarchical_psum,
+                          hierarchical_psum_sharded)
+from .overlap import (ring_all_reduce, ring_all_reduce_sharded,
+                      make_accum_train_step)
 from .elastic import (plan_mesh, rescale_tree, make_mesh_from_plan,
                       degrade_sequence, ElasticPlan)
 
@@ -10,7 +13,9 @@ __all__ = [
     "CompressionSpec", "quantize_blockwise", "dequantize_blockwise",
     "topk_sparsify", "topk_densify", "init_error_feedback",
     "compress_with_feedback", "hierarchical_psum",
-    "ring_all_reduce", "make_accum_train_step",
+    "hierarchical_psum_sharded",
+    "ring_all_reduce", "ring_all_reduce_sharded", "make_accum_train_step",
     "plan_mesh", "rescale_tree", "make_mesh_from_plan", "degrade_sequence",
     "ElasticPlan",
+    "shard_map", "HAS_NATIVE_SHARD_MAP",
 ]

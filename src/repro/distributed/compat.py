@@ -1,0 +1,75 @@
+"""Version-tolerant ``shard_map`` import shim.
+
+The ``shard_map`` API has moved twice across JAX releases:
+
+* old releases expose it only as ``jax.experimental.shard_map.shard_map``
+  with ``check_rep=`` and an ``auto=`` frozenset of *non*-manual axes;
+* new releases promote it to ``jax.shard_map`` with ``check_vma=`` and an
+  ``axis_names=`` set of *manual* axes (the complement convention).
+
+Every caller in this repo goes through :func:`shard_map` below, which speaks
+one normalized interface (``manual_axes`` = axes the body handles manually,
+``check`` = replication/varying-manual-axes checking) and translates to
+whichever API the installed JAX provides.  Shared by
+``distributed/overlap.py``, ``distributed/compression.py``,
+``core/pipeline.py`` and ``launch/pipeline_prefill.py``.
+"""
+
+from __future__ import annotations
+
+import contextvars
+from typing import Callable, FrozenSet, Iterable, Optional
+
+import jax
+
+# jax.shard_map either exists (new JAX) or raises AttributeError through the
+# deprecation module's __getattr__ (old JAX) — getattr-with-default covers both.
+_NATIVE = getattr(jax, "shard_map", None)
+HAS_NATIVE_SHARD_MAP = _NATIVE is not None
+
+# Manual axes of the innermost shard_map body currently being traced.  A
+# with_sharding_constraint inside a manual region must not mention manual
+# axes ("Axis ... is also found in manual_axes"), but from inside the body
+# there is no version-stable JAX API to ask which axes are manual — so the
+# shim records them around the traced call and constraint helpers
+# (models/layers._constrain) strip them from their specs.
+_MANUAL_AXES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_manual_axes", default=frozenset())
+
+
+def current_manual_axes() -> FrozenSet[str]:
+    """Manual mesh axes of the shard_map body being traced (empty outside)."""
+    return _MANUAL_AXES.get()
+
+
+def shard_map(f: Callable, mesh, in_specs, out_specs, *,
+              manual_axes: Optional[Iterable[str]] = None,
+              check: bool = False) -> Callable:
+    """``shard_map`` across JAX versions, one calling convention.
+
+    ``manual_axes``: mesh axis names the body handles manually (defaults to
+    all of them); the remaining axes stay auto/GSPMD.  ``check``: enable the
+    replication (``check_rep``) / varying-manual-axes (``check_vma``) check.
+    """
+    axes: FrozenSet[str] = (frozenset(mesh.axis_names)
+                            if manual_axes is None else frozenset(manual_axes))
+    unknown = axes - frozenset(mesh.axis_names)
+    if unknown:
+        raise ValueError(f"manual_axes {sorted(unknown)} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+
+    def traced(*args, **kwargs):
+        token = _MANUAL_AXES.set(_MANUAL_AXES.get() | axes)
+        try:
+            return f(*args, **kwargs)
+        finally:
+            _MANUAL_AXES.reset(token)
+
+    if HAS_NATIVE_SHARD_MAP:
+        return _NATIVE(traced, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, axis_names=set(axes),
+                       check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - axes
+    return _sm(traced, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check, auto=auto)

@@ -153,3 +153,35 @@ def hierarchical_psum(x: jax.Array, *, fast_axis: str = "data",
     # dequantized value is numerically what the receiver reconstructs.
     c = _compress_leaf(x, spec).astype(x.dtype)
     return jax.lax.psum(c, slow_axis)
+
+
+def hierarchical_psum_sharded(mesh, x: jax.Array, *, fast_axis: str = "data",
+                              slow_axis: Optional[str] = "pod",
+                              spec: Optional[CompressionSpec] = None
+                              ) -> jax.Array:
+    """``hierarchical_psum`` under ``shard_map`` over the reduction axes.
+
+    ``x`` is the global array with the combined device axes leading (one
+    slice per (slow, fast) device); every device returns the reduced value.
+    Uses the version-tolerant :mod:`repro.distributed.compat` shim.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .compat import shard_map
+
+    axes = (slow_axis, fast_axis) if slow_axis else (fast_axis,)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    if x.shape[0] != n:
+        raise ValueError(
+            f"x leading dim {x.shape[0]} != {axes} device count {n}: each "
+            f"device contributes exactly one slice")
+
+    def body(xl):
+        return hierarchical_psum(xl[0], fast_axis=fast_axis,
+                                 slow_axis=slow_axis, spec=spec)[None]
+
+    return shard_map(body, mesh, in_specs=P(axes), out_specs=P(axes),
+                     manual_axes=set(axes))(x)

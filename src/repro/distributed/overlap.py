@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .compat import shard_map
 from .compression import CompressionSpec, compress_with_feedback
 
 
@@ -92,6 +93,30 @@ def ring_all_reduce(x: jax.Array, axis: str, *, n_chunks: int = 1
         n_elems *= d
     out = segs.reshape(-1)[:n_elems]
     return out.reshape(orig_shape)
+
+
+def ring_all_reduce_sharded(mesh, x: jax.Array, axis: str, *,
+                            n_chunks: int = 1) -> jax.Array:
+    """``ring_all_reduce`` under ``shard_map`` over mesh ``axis``.
+
+    ``x`` is the global array with the device axis leading (one slice per
+    device of ``axis``); every device returns the full ring sum, so the
+    result has the same shape as ``x``.  Uses the version-tolerant
+    :mod:`repro.distributed.compat` shim; other mesh axes stay auto.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    n = dict(zip(mesh.axis_names, mesh.axis_sizes))[axis]
+    if x.shape[0] != n:
+        raise ValueError(
+            f"x leading dim {x.shape[0]} != axis {axis!r} size {n}: each "
+            f"device contributes exactly one slice")
+
+    def body(xl):
+        return ring_all_reduce(xl[0], axis, n_chunks=n_chunks)[None]
+
+    return shard_map(body, mesh, in_specs=P(axis), out_specs=P(axis),
+                     manual_axes={axis})(x)
 
 
 # ------------------------------------------------- microbatch accum overlap

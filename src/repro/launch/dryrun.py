@@ -12,8 +12,8 @@ import jax               # noqa: E402
 from repro.configs.base import SHAPES, get_arch, shapes_for  # noqa: E402
 from repro.configs import archs  # noqa: E402,F401
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.launch.roofline import (analytic_bytes, parse_collectives,  # noqa: E402
-                                   roofline_terms)
+from repro.launch.roofline import (analytic_bytes, cost_dict,  # noqa: E402
+                                   parse_collectives, roofline_terms)
 from repro.launch.specs import make_cell, model_flops  # noqa: E402
 
 """Multi-pod dry-run (deliverable e).
@@ -56,7 +56,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             print(f"[{arch}/{shape_name}] memory_analysis:", rec["memory"])
         except Exception as e:                           # CPU backend limits
             rec["memory"] = {"error": str(e)}
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled)
         flops = float(cost.get("flops", 0.0))
         nbytes = float(cost.get("bytes accessed", 0.0))
         rec["cost"] = {"flops": flops, "bytes_accessed": nbytes}
@@ -109,7 +109,7 @@ def _lower_stats(arch: str, shape_name: str, multi_pod: bool, depth: int,
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          donate_argnums=cell.donate)
         compiled = jitted.lower(*cell.args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     mem = {}
     try:

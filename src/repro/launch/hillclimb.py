@@ -27,8 +27,8 @@ from repro.configs.base import SHAPES, get_arch  # noqa: E402
 from repro.configs import archs  # noqa: E402,F401
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.roofline import (_DTYPE_BYTES, _SHAPE_RE,  # noqa: E402
-                                   analytic_bytes, parse_collectives,
-                                   roofline_terms)
+                                   analytic_bytes, cost_dict,
+                                   parse_collectives, roofline_terms)
 from repro.launch.specs import make_cell, model_flops  # noqa: E402
 
 _COLL_RE = re.compile(
@@ -99,7 +99,7 @@ def run(arch: str, shape_name: str, variant: str, depth: int,
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          donate_argnums=cell.donate)
         compiled = jitted.lower(*cell.args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     flops = float(cost.get("flops", 0.0))

@@ -45,6 +45,8 @@ from repro import sharding as sh  # noqa: E402
 from repro.configs.base import ArchConfig, get_arch  # noqa: E402
 from repro.configs import archs  # noqa: E402,F401
 from repro.core import pipeline  # noqa: E402
+from repro.distributed.compat import (HAS_NATIVE_SHARD_MAP,  # noqa: E402
+                                      shard_map)
 from repro.models import lm  # noqa: E402
 
 
@@ -80,42 +82,54 @@ def make_pipelined_prefill(cfg: ArchConfig, mesh: Mesh, n_micro: int,
     -> last-token hidden (n_micro, b_m, d)."""
     n_stages = mesh.shape["pod"]
     scfg = stage_config(cfg, n_stages)
+    if not HAS_NATIVE_SHARD_MAP:
+        # Old-JAX partial-auto shard_map: XLA's SPMD partitioner cannot
+        # handle the period scan (a while op) inside the manual region
+        # ("Check failed: IsManualSubgroup"); unroll the stage stack there.
+        scfg = dataclasses.replace(scfg, static_unroll=True)
     b_m = batch // n_micro
     # the paper's dependency automaton -> static schedule
     sched = pipeline.derive_schedule(["pointwise"] * (n_stages - 1), n_micro)
     table = jnp.asarray(sched.table)                 # (S, T)
     n_ticks = sched.n_ticks
 
-    def body(stage_params_local, embed_local, tokens_all):
+    def body(stage_params_local, embed_local, tokens_all, sid_arr):
         pme = jax.tree.map(lambda l: l[0], stage_params_local)
-        sid = jax.lax.axis_index("pod")
+        # stage id from the P("pod")-sharded arange input: lax.axis_index
+        # lowers to a PartitionId instruction, which XLA's SPMD partitioner
+        # rejects inside a partially-manual (auto data/model) shard_map
+        sid = sid_arr[0]
         pos = jnp.broadcast_to(jnp.arange(seq_len)[None], (b_m, seq_len))
         buf = jnp.zeros((b_m, seq_len, cfg.d_model),
                         jnp.dtype(cfg.compute_dtype))
         outs = jnp.zeros((n_micro, b_m, cfg.d_model),
                          jnp.dtype(cfg.compute_dtype))
 
-        def tick(carry, tck):
-            buf, outs = carry
+        act_spec = (P("data", None, None)
+                    if b_m % mesh.shape["data"] == 0 else P(None, None, None))
+        # Python loop, not lax.scan: a collective-permute inside a scan under
+        # a partially-manual (auto data/model) shard_map trips XLA's SPMD
+        # partitioner on older JAX ("Check failed: IsManualSubgroup"); the
+        # tick count is static and small (n_micro + n_stages - 1), so the
+        # unroll costs little.  The constraint after each ppermute is the
+        # explicit sharding touchpoint the partitioner needs on collective
+        # outputs in this mode (value-neutral).
+        for tck in range(n_ticks):
             item = table[sid, tck]                   # -1 => idle
             safe = jnp.clip(item, 0, n_micro - 1)
             toks = jax.lax.dynamic_index_in_dim(
                 tokens_all, safe, axis=0, keepdims=False)  # (b_m, S)
             x0 = embed_local[0][toks]                # stage-0 input
             x_in = jnp.where(sid == 0, x0, buf)
-            if b_m % mesh.shape["data"] == 0:
-                x_in = jax.lax.with_sharding_constraint(
-                    x_in, P("data", None, None))
+            x_in = jax.lax.with_sharding_constraint(x_in, act_spec)
             y = lm.run_stack(scfg, pme, x_in, pos)
             y = jnp.where(item >= 0, y, buf)         # idle: hold
             outs = jnp.where((sid == n_stages - 1) & (item >= 0),
                              outs.at[safe].set(y[:, -1, :]), outs)
-            nxt = jax.lax.ppermute(
+            buf = jax.lax.ppermute(
                 y, "pod",
                 [(i, (i + 1) % n_stages) for i in range(n_stages)])
-            return (nxt, outs), None
-
-        (_, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+            buf = jax.lax.with_sharding_constraint(buf, act_spec)
         # broadcast the final answer to all stages; f32 sidesteps an XLA-CPU
         # AllReducePromotion crash on bf16 all-reduce (copy-opcode clone bug)
         outs = jax.lax.psum(outs.astype(jnp.float32), "pod")
@@ -138,14 +152,17 @@ def make_pipelined_prefill(cfg: ArchConfig, mesh: Mesh, n_micro: int,
     tokens_spec = P(None, "data", None)
 
     def fn(stage_params, embed, tokens):
-        h = jax.shard_map(
+        stage_ids = jax.lax.with_sharding_constraint(
+            jnp.arange(n_stages, dtype=jnp.int32),
+            NamedSharding(mesh, P("pod")))
+        h = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P("pod"), stage_specs,
                                    is_leaf=lambda x: isinstance(x, P)),
-                      P(None), P(None)),
+                      P(None), P(None), P("pod")),
             out_specs=P(None),
-            axis_names={"pod"},              # manual over pod; data/model auto
-            check_vma=False)(stage_params, embed, tokens)
+            manual_axes={"pod"},             # manual over pod; data/model auto
+            check=False)(stage_params, embed, tokens, stage_ids)
         return h
 
     embed_sds = jax.ShapeDtypeStruct(
@@ -159,7 +176,7 @@ def make_pipelined_prefill(cfg: ArchConfig, mesh: Mesh, n_micro: int,
 
 def main():
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.roofline import parse_collectives
+    from repro.launch.roofline import cost_dict, parse_collectives
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
@@ -188,7 +205,7 @@ def main():
         cfg, mesh, args.micro, args.seq_len, args.batch)
     with mesh:
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*sds).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     mem = {}

@@ -66,15 +66,41 @@ def rope_freqs(hd: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
 
 
+def _rope_hd_pin(x):
+    """Constrain ``x`` to (batch-axes, None, ..., None) through rotate-half.
+
+    Needed for correctness, not layout — but only when the head count (dim
+    -2) does not divide the model axis: the TP projection then hands a
+    device a *fraction of a head*, i.e. head_dim itself is sharded, and
+    XLA's SPMD partitioner miscompiles the cross-shard split/concat of the
+    rotate-half — k comes out wrong by O(1), not ulps (observed on jaxlib
+    0.4.x CPU; tests/test_attn_variants.py guards the whole layout matrix
+    against the unsharded oracle).  With heads divisible (whole heads per
+    device, the common q case) the pin is skipped — no reshard cost.  Every
+    pinned dim is named — PartitionSpec.UNCONSTRAINED entries are
+    themselves mishandled by this partitioner (verified on the MoE combine
+    gather), so the pin replicates S/H/D and lets downstream constraints
+    re-shard."""
+    mm = _mesh_axis("model")
+    if mm <= 1 or x.shape[-2] % mm == 0:
+        return x
+    baxes = _ambient_batch_axes()
+    if baxes is None:
+        return x
+    b = baxes if x.shape[0] % _axes_size(baxes) == 0 else None
+    return _constrain(x, b, *((None,) * (x.ndim - 1)))
+
+
 def apply_rope(x, pos, theta: float):
     """x (..., S, H, D) rotated by position ``pos`` (..., S)."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                       # (D/2,)
     ang = pos[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
     cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    return jnp.concatenate([x1 * cos - x2 * sin,
-                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    x1, x2 = jnp.split(_rope_hd_pin(x).astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return _rope_hd_pin(out)
 
 
 def apply_mrope(x, pos3, theta: float, sections: Tuple[int, ...]):
@@ -89,9 +115,10 @@ def apply_mrope(x, pos3, theta: float, sections: Tuple[int, ...]):
     pos = jnp.moveaxis(pos3.astype(jnp.float32)[sel], 0, -1)
     ang = pos * freqs
     cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    return jnp.concatenate([x1 * cos - x2 * sin,
-                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    x1, x2 = jnp.split(_rope_hd_pin(x).astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return _rope_hd_pin(out)
 
 
 def positional_rotate(cfg: ArchConfig, x, pos):
@@ -133,9 +160,33 @@ def _ambient_batch_axes() -> Optional[Tuple[str, ...]]:
         if "data" in mesh.axis_names else None
 
 
+def _strip_manual_axes(entry, manual):
+    if entry is None or not manual:
+        return entry
+    if isinstance(entry, str):
+        return None if entry in manual else entry
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a not in manual)
+        return kept if kept else None
+    return entry
+
+
 def _constrain(x, *spec):
-    """with_sharding_constraint against the ambient mesh (no-op without)."""
+    """with_sharding_constraint against the ambient mesh (no-op without).
+
+    Inside a shard_map body (entered through the repro.distributed.compat
+    shim), the body's manual axes are stripped from the spec — a constraint
+    naming a manual axis is illegal there, and the axis is already fixed by
+    the shard_map specs anyway.
+    """
     from jax.sharding import PartitionSpec as P
+    try:
+        from repro.distributed.compat import current_manual_axes
+        manual = current_manual_axes()
+    except Exception:
+        manual = frozenset()
+    if manual:
+        spec = tuple(_strip_manual_axes(s, manual) for s in spec)
     try:
         return jax.lax.with_sharding_constraint(x, P(*spec))
     except Exception:
@@ -580,7 +631,17 @@ def moe(cfg: ArchConfig, p: Params, x, *, capacity: Optional[int] = None):
 
     flat = jnp.concatenate(
         [ye.reshape(g_, e * c, d), jnp.zeros((g_, 1, d), ye.dtype)], axis=1)
-    y_tk = jax.vmap(lambda f_, s_: f_[s_])(flat, slot)  # (G, T*K, d)
+    # Pin the combine gather's operand to a fully-named layout (group axis
+    # sharded as dispatched, expert rows + d replicated): an expert-sharded
+    # or UNCONSTRAINED-annotated row dim feeds an XLA SPMD gather miscompile
+    # on jaxlib 0.4.x (y_tk off by O(1), not ulps) — see
+    # tests/test_attn_variants.py's oracle check.
+    pinned = _constrain_moe_groups(cfg, flat)
+    if pinned is flat:                   # helper bailed (non-seq mode, no
+        baxes = _ambient_batch_axes()    # mesh, or indivisible groups):
+        b_ax = baxes if baxes and g_ % _axes_size(baxes) == 0 else None
+        pinned = _constrain(flat, b_ax, None, None)
+    y_tk = jax.vmap(lambda f_, s_: f_[s_])(pinned, slot)  # (G, T*K, d)
     y_tk = y_tk * (w.reshape(g_, t * k, 1) * keep[..., None]).astype(y_tk.dtype)
     y = y_tk.reshape(g_, t, k, d).sum(axis=2)
 

@@ -1,0 +1,214 @@
+"""Multi-chip scale-out (ChipMesh): chip-level partitioner, per-chip
+mapping, inter-chip DMA lowering, and the link model in both simulator
+engines.
+
+Equivalence contract (ISSUE 3):
+  * ``chips=1`` is bit-identical — outputs AND cycle/message/byte/busy/
+    high-water accounting — to the single-chip path;
+  * a ``chips=2`` resnet-block-chain run matches reference outputs bitwise
+    across both engines and the numpy/reference compute planes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ChipMesh, LinkSpec, PartitionError, Simulator,
+                        build_lenet_like, build_resnet_block_chain,
+                        compile_model, execute_reference, make_chip,
+                        make_mesh, partition_chips, partition_graph,
+                        serialize_config)
+
+
+def _stat_tuple(s):
+    return (s.cycles, s.messages, s.bytes_sent, dict(s.busy),
+            dict(s.first_busy), dict(s.last_busy),
+            dict(s.sram_high_water),
+            {k: (v.messages, v.bytes, v.busy) for k, v in s.links.items()})
+
+
+def _images(n, shp, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=shp).astype(np.float32) for _ in range(n)]
+
+
+# ------------------------------------------------------------- partitioner
+def test_partition_chips_prefers_no_cut_when_it_fits():
+    g = build_resnet_block_chain(2)            # 4 partitions
+    mesh = make_mesh(2, chip=make_chip(4, "banded"))
+    assign = partition_chips(partition_graph(g), mesh)
+    assert set(assign.values()) == {0}, "fits on chip 0, no cut"
+
+
+def test_partition_chips_cuts_at_capacity_min_bytes():
+    g = build_resnet_block_chain(4)            # 8 partitions
+    mesh = make_mesh(2, chip=make_chip(6, "banded"))
+    pg = partition_graph(g)
+    assign = partition_chips(pg, mesh)
+    # contiguous, capacity-respecting, and every cut edge on a mesh link
+    order = [assign[p] for p in sorted(assign)]
+    assert order == sorted(order), "assignment must be contiguous"
+    for c in set(order):
+        assert order.count(c) <= 6
+    assert set(order) == {0, 1}
+    for (s, d) in pg.edges:
+        if s == -1:
+            continue
+        assert mesh.connected(assign[s], assign[d])
+
+
+def test_partition_chips_capacity_error():
+    g = build_resnet_block_chain(4)            # 8 partitions > 2 x 3 cores
+    mesh = make_mesh(2, chip=make_chip(3, "banded"))
+    with pytest.raises(PartitionError):
+        partition_chips(partition_graph(g), mesh)
+
+
+def test_link_spec_transfer_delay():
+    link = LinkSpec(latency=4, width_bytes=64)
+    assert link.transfer_delay(16) == 4        # one beat: latency only
+    assert link.transfer_delay(64) == 4
+    assert link.transfer_delay(65) == 5        # second beat
+    assert link.transfer_delay(640) == 13
+
+
+# ------------------------------------------------- chips=1 bit-identical
+def test_chips1_identical_to_single_chip_path():
+    """compile_model(..., chips=1) and a 1-chip mesh both reproduce the
+    single-chip run bit-for-bit, outputs and all accounting."""
+    graph = build_lenet_like()
+    chip = make_chip(8, "banded")
+    prog = compile_model(graph, chip)
+    prog_c1 = compile_model(graph, chip, chips=1)
+    mesh1 = make_mesh(1, chip=chip)
+    prog_m1 = compile_model(graph, chip, mesh=mesh1)
+    assert prog_c1.mesh is None                 # same code path entirely
+    assert prog_m1.dma_streams == []
+    images = _images(3, (1, 12, 12))
+    for engine in ("event", "reference"):
+        for sched in ("pipelined", "sequential"):
+            o0, s0 = Simulator(prog, chip, engine=engine).run(
+                images, schedule=sched)
+            o1, s1 = Simulator(prog_c1, chip, engine=engine).run(
+                images, schedule=sched)
+            om, sm = Simulator(prog_m1, mesh1, engine=engine).run(
+                images, schedule=sched)
+            for a, b, c in zip(o0, o1, om):
+                for v in a:
+                    np.testing.assert_array_equal(a[v], b[v])
+                    np.testing.assert_array_equal(a[v], c[v])
+            assert _stat_tuple(s0) == _stat_tuple(s1)
+            assert _stat_tuple(s0) == _stat_tuple(sm)
+
+
+# ------------------------------------------------- chips=2 resnet chain
+@pytest.fixture(scope="module")
+def resnet_two_chip():
+    graph = build_resnet_block_chain(4)
+    chip = make_chip(6, "banded")
+    mesh = make_mesh(2, chip=chip)
+    prog = compile_model(graph, chip, chips=2)
+    wide = make_chip(12, "banded")
+    prog_wide = compile_model(graph, wide)
+    return graph, chip, mesh, prog, wide, prog_wide
+
+
+def test_chips2_splits_and_lowers_dma(resnet_two_chip):
+    graph, chip, mesh, prog, wide, prog_wide = resnet_two_chip
+    chips_used = {prog.chip_of(c) for c in prog.cores}
+    assert chips_used == {0, 1}
+    assert prog.dma_streams, "cut edges must lower to inter-chip DMA"
+    for s in prog.dma_streams:
+        assert (s.src_chip, s.dst_chip) in mesh.links
+        # the consumer enforces the cut edge with the same compiled
+        # frontier-table ramp machinery as intra-chip edges
+        lc = prog.cores[s.dst_core].lcu[s.value]
+        assert lc.table is not None
+
+
+def test_chips2_bitwise_outputs_all_engines_planes(resnet_two_chip):
+    graph, chip, mesh, prog, wide, prog_wide = resnet_two_chip
+    images = _images(3, (4, 8, 8))
+    want = [execute_reference(graph, {"x": im}) for im in images]
+    stats = {}
+    outs = {}
+    for engine in ("event", "reference"):
+        for plane in ("numpy", "reference"):
+            for sched in ("pipelined", "sequential"):
+                o, s = Simulator(prog, mesh, engine=engine,
+                                 compute_plane=plane).run(
+                    images, schedule=sched)
+                outs[(engine, plane, sched)] = o
+                stats[(engine, plane, sched)] = s
+    # single-chip oracle outputs (the scale-out must not change a bit)
+    o_wide, _ = Simulator(prog_wide, wide, engine="event").run(images)
+    base = outs[("event", "numpy", "pipelined")]
+    for got, ref, w in zip(base, want, o_wide):
+        for v in got:
+            np.testing.assert_allclose(got[v], ref[v], atol=1e-5)
+            np.testing.assert_array_equal(got[v], w[v])
+    for key, o in outs.items():
+        ref_o = outs[("event", "numpy", key[2])]
+        for a, b in zip(o, ref_o):
+            for v in a:
+                np.testing.assert_array_equal(a[v], b[v], err_msg=str(key))
+    # accounting identical across engines (per plane and schedule)
+    for plane in ("numpy", "reference"):
+        for sched in ("pipelined", "sequential"):
+            assert _stat_tuple(stats[("event", plane, sched)]) == \
+                _stat_tuple(stats[("reference", plane, sched)]), \
+                (plane, sched)
+
+
+def test_chips2_link_accounting_and_latency(resnet_two_chip):
+    graph, chip, mesh, prog, wide, prog_wide = resnet_two_chip
+    images = _images(2, (4, 8, 8))
+    _, s = Simulator(prog, mesh, engine="event").run(images)
+    assert (0, 1) in s.links
+    ls = s.links[(0, 1)]
+    n_dst = len({d.dst_core for d in prog.dma_streams})
+    # one message per finalized pixel of the cut value per consumer core
+    c, h, w = 4, 8, 8
+    assert ls.messages == len(images) * h * w * n_dst
+    assert ls.bytes == ls.messages * c * 4
+    assert ls.busy == ls.messages  # 16B rows on a 64B link: 1 beat each
+    assert 0.0 < s.link_occupancy((0, 1))
+    util = s.chip_utilization(mesh)
+    assert len(util) == 2 and all(0.0 < u <= 1.0 for u in util)
+
+    # a slower link strictly delays the pipeline, never changes outputs
+    slow = dataclasses.replace(mesh, link=LinkSpec(latency=64,
+                                                   width_bytes=4))
+    prog_slow = compile_model(graph, chip, mesh=slow)
+    o_fast, s_fast = Simulator(prog, mesh, engine="event").run(images)
+    for engine in ("event", "reference"):
+        o_slow, s_slow = Simulator(prog_slow, slow, engine=engine).run(images)
+        assert s_slow.cycles > s_fast.cycles
+        for a, b in zip(o_fast, o_slow):
+            for v in a:
+                np.testing.assert_array_equal(a[v], b[v])
+
+
+def test_serialize_includes_mesh(resnet_two_chip):
+    import json
+    graph, chip, mesh, prog, wide, prog_wide = resnet_two_chip
+    bundle = json.loads(serialize_config(prog))
+    assert bundle["mesh"]["n_chips"] == 2
+    assert bundle["mesh"]["cores_per_chip"] == 6
+    assert bundle["mesh"]["dma_streams"]
+    for s in bundle["mesh"]["dma_streams"]:
+        assert s["src_chip"] != s["dst_chip"]
+
+
+def test_mesh_missing_link_raises():
+    """An edge landing on a non-linked chip pair must fail loudly."""
+    g = build_resnet_block_chain(4)
+    chip = make_chip(6, "banded")
+    base = make_mesh(2, chip=chip)
+    nolink = ChipMesh(chip=chip, n_chips=2, links=frozenset(),
+                      link=base.link)
+    with pytest.raises(PartitionError):
+        partition_chips(partition_graph(g), nolink)
