@@ -1,22 +1,57 @@
-"""Example: continuous-batching inference server loop.
+"""Example: request-level serving on the CM accelerator + the JAX batcher.
 
-The paper's accelerator is configured once and streamed (§1-§2); here a
-fixed-slot decode batch never drains — finished sequences free their slot
-for queued requests mid-flight.
+The paper's accelerator is configured once and *streamed* (§1-§2).  Part 1
+drives the cycle-accurate serving runtime end-to-end: compile two models
+onto disjoint core sets of one chip (weight-stationary co-residency),
+submit a Poisson request stream against both tenants, drain, and print the
+per-request latency table plus per-tenant percentiles.  Part 2 keeps the
+JAX-side analogue: a fixed-slot continuous batcher whose freed slots
+backfill mid-flight.
 
 Run: PYTHONPATH=src python examples/continuous_serving.py
 """
 
 import numpy as np
 
-from repro.configs.base import smoke_config
-from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.core import (build_fig2_graph, build_resnet_block_chain,
+                        make_chip, place_tenants)
+from repro.runtime import CmServer, poisson_arrivals, split_stats
 
 
-def main():
+def cm_serving():
+    rng = np.random.default_rng(0)
+    chip = make_chip(8, "banded")
+    placement = place_tenants(
+        [build_fig2_graph(), build_resnet_block_chain(2)], chip)
+    print(f"tenant core ranges: {placement.core_ranges}")
+
+    server = CmServer(placement, max_inflight=4)
+
+    # open-loop Poisson traffic, requests alternating between the tenants
+    n = 10
+    arrivals = poisson_arrivals(n, rate=0.02, seed=7)
+    for i, arrival in enumerate(arrivals):
+        image = rng.normal(size=(4, 8, 8)).astype(np.float32)
+        server.submit_image(image, arrival=int(arrival), tenant=i % 2)
+
+    report = server.drain()            # submit -> drain -> latency table
+    print(report.table())
+    for tk in range(placement.n_tenants):
+        print(f"tenant {tk}: p50={report.percentile(50, tenant=tk):.0f} "
+              f"p99={report.percentile(99, tenant=tk):.0f} cycles")
+    per = split_stats(report.stats, placement,
+                      [r.tenant for r in report.requests])
+    for tk, s in enumerate(per):
+        print(f"tenant {tk}: busy cores={sorted(s.busy)} "
+              f"mean util={s.mean_utilization():.1%}")
+
+
+def jax_batcher():
+    from repro.configs.base import smoke_config
+    from repro.serve.scheduler import ContinuousBatcher, Request
+
     cfg = smoke_config("qwen2-7b")
     rng = np.random.default_rng(0)
-
     engine = ContinuousBatcher(cfg, n_slots=4, max_len=64)
 
     # a bursty arrival pattern: 10 requests, ragged prompts/budgets
@@ -43,6 +78,13 @@ def main():
     print(f"engine steps: {engine.stats['steps']}, "
           f"prefills: {engine.stats['prefills']}, "
           f"slot utilization: {engine.utilization:.1%}")
+
+
+def main():
+    print("=== CM serving runtime (cycle-accurate) ===")
+    cm_serving()
+    print("\n=== JAX continuous batcher ===")
+    jax_batcher()
 
 
 if __name__ == "__main__":

@@ -1,13 +1,14 @@
 """cmnnc core: the paper's compiler + CM-accelerator simulator."""
 
-from .compiler import compile_model, serialize_config
+from .compiler import (TenantPlacement, compile_model, place_tenants,
+                       serialize_config)
 from .compute_plane import (ComputeDescriptor, ComputePlane, NumpyPlane,
                             PallasPlane, ReferencePlane, dequantize_int8,
                             make_descriptor, resolve_plane)
 from .graph import (Graph, build_fig2_graph, build_lenet_like,
                     build_resnet_block_chain, execute_reference)
 from .hwspec import (ChipMesh, ChipSpec, CoreSpec, LinkSpec, make_chip,
-                     make_mesh)
+                     make_mesh, subchip, submesh)
 from .lowering import InterChipStream
 from .mapping import MappingError, map_partitions, map_partitions_mesh
 from .partition import (PartitionError, cut_bytes, partition_chips,
@@ -20,12 +21,13 @@ __all__ = [
     "Graph", "build_fig2_graph", "build_lenet_like",
     "build_resnet_block_chain", "execute_reference",
     "ChipMesh", "ChipSpec", "CoreSpec", "LinkSpec", "make_chip", "make_mesh",
+    "subchip", "submesh",
     "InterChipStream",
     "MappingError", "map_partitions", "map_partitions_mesh",
     "PartitionError", "cut_bytes", "partition_chips", "partition_graph",
     "DeadlockError", "LinkStats", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
-    "compile_model", "serialize_config",
+    "compile_model", "serialize_config", "TenantPlacement", "place_tenants",
     "ComputeDescriptor", "ComputePlane", "NumpyPlane", "PallasPlane",
     "ReferencePlane", "dequantize_int8", "make_descriptor", "resolve_plane",
 ]

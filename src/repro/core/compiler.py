@@ -12,16 +12,17 @@ and serialized, initialize the accelerator").
 
 from __future__ import annotations
 
+import dataclasses
 import json
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .graph import Graph
-from .hwspec import ChipMesh, ChipSpec, make_mesh
+from .hwspec import ChipMesh, ChipSpec, make_mesh, subchip, submesh
+from .mapping import MappingError, map_partitions, map_partitions_mesh
 from .lowering import AcceleratorProgram, lower
-from .mapping import map_partitions, map_partitions_mesh
-from .partition import partition_chips, partition_graph
+from .partition import PartitionError, partition_chips, partition_graph
 
 
 def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
@@ -47,6 +48,108 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
     chip_assign = partition_chips(pg, mesh)
     mapping = map_partitions_mesh(pg, mesh, chip_assign)
     return lower(pg, mapping, quantizer=quantizer, mesh=mesh)
+
+
+# ----------------------------------------------------- multi-tenant placement
+@dataclasses.dataclass
+class TenantPlacement:
+    """Co-resident compiled programs on disjoint core sets of one chip/mesh.
+
+    Weight-stationary residency: each tenant's crossbars are programmed once
+    onto its own cores and never swapped, exactly like a single-tenant
+    deployment — co-residency shares only the host GCU/DMA stream (and, on a
+    mesh, the link fabric's accounting), so a tenant's *values* are bitwise
+    those of the same program simulated alone; only timing can shift.
+    """
+
+    programs: List[AcceleratorProgram]
+    core_ranges: List[Tuple[int, int]]     # per tenant: global core ids [lo, hi)
+    chip: ChipSpec
+    mesh: Optional[ChipMesh] = None
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.programs)
+
+    def tenant_of_core(self, core: int) -> int:
+        for tk, (lo, hi) in enumerate(self.core_ranges):
+            if lo <= core < hi:
+                return tk
+        raise KeyError(f"core {core} belongs to no tenant")
+
+
+def place_tenants(graphs: Sequence[Graph], chip: ChipSpec,
+                  mesh: Optional[ChipMesh] = None,
+                  quantizer=None) -> TenantPlacement:
+    """Compile several models for weight-stationary co-residency.
+
+    Single chip: tenant ``j`` gets the next contiguous core window sized to
+    its partition count; its mapping is solved against the window's induced
+    interconnect (:func:`hwspec.subchip`) and offset to global core ids, so
+    the per-tenant ``AcceleratorProgram`` is a valid stand-alone program on
+    the shared chip.  Mesh: placement is chip-granular — tenant ``j`` gets a
+    contiguous chip window (induced :func:`hwspec.submesh`), the chip-level
+    partitioner runs inside the window, and the per-chip mapper + lowering
+    run against the full mesh so cut edges ride the real links.
+
+    The result's ``programs`` feed ``Simulator([...])`` / ``CmServer`` for a
+    joint, contention-sharing simulation with separable per-tenant stats.
+    """
+    if mesh is not None:
+        return _place_tenants_mesh(graphs, mesh, quantizer)
+    programs: List[AcceleratorProgram] = []
+    ranges: List[Tuple[int, int]] = []
+    off = 0
+    for j, g in enumerate(graphs):
+        pg = partition_graph(g)
+        need = len(pg.partitions)
+        if off + need > chip.n_cores:
+            raise MappingError(
+                f"tenant {j} needs {need} cores but only "
+                f"{chip.n_cores - off} of {chip.n_cores} remain")
+        sub = subchip(chip, off, off + need)
+        try:
+            local = map_partitions(pg, sub)
+        except MappingError as e:
+            raise MappingError(
+                f"tenant {j}: no mapping inside core window "
+                f"[{off}, {off + need}): {e}") from e
+        mapping = {p: c + off for p, c in local.items()}
+        programs.append(lower(pg, mapping, quantizer=quantizer))
+        ranges.append((off, off + need))
+        off += need
+    return TenantPlacement(programs=programs, core_ranges=ranges, chip=chip)
+
+
+def _place_tenants_mesh(graphs, mesh: ChipMesh, quantizer) -> TenantPlacement:
+    programs: List[AcceleratorProgram] = []
+    ranges: List[Tuple[int, int]] = []
+    cpc = mesh.chip.n_cores
+    chip_off = 0
+    for j, g in enumerate(graphs):
+        pg = partition_graph(g)
+        need_chips = -(-len(pg.partitions) // cpc)
+        placed = None
+        for k in range(need_chips, mesh.n_chips - chip_off + 1):
+            try:
+                sub = submesh(mesh, chip_off, chip_off + k)
+                local_assign = partition_chips(pg, sub)
+                placed = ({p: c + chip_off for p, c in local_assign.items()},
+                          k)
+                break
+            except PartitionError:
+                continue
+        if placed is None:
+            raise PartitionError(
+                f"tenant {j}: no feasible chip window from chip {chip_off} "
+                f"({mesh.n_chips - chip_off} chips left)")
+        chip_assign, k = placed
+        mapping = map_partitions_mesh(pg, mesh, chip_assign)
+        programs.append(lower(pg, mapping, quantizer=quantizer, mesh=mesh))
+        ranges.append((chip_off * cpc, (chip_off + k) * cpc))
+        chip_off += k
+    return TenantPlacement(programs=programs, core_ranges=ranges,
+                           chip=mesh.chip, mesh=mesh)
 
 
 def serialize_config(prog: AcceleratorProgram) -> str:

@@ -87,6 +87,26 @@ def make_chip(n_cores: int, topology: str = "all_to_all", width: int = 256,
                     edges=edges, **kw)
 
 
+# ------------------------------------------------------- tenant core windows
+def subchip(chip: ChipSpec, lo: int, hi: int) -> ChipSpec:
+    """The induced sub-chip over the core window ``[lo, hi)``, relabeled to
+    0-based ids.
+
+    Tenant placement (``compile_model``'s :func:`place_tenants` pass) solves
+    each tenant's mapping against the window's *induced* interconnect, so a
+    mapping that is feasible on the sub-chip is feasible verbatim on the real
+    chip once core ids are offset by ``lo`` — contiguous windows of the
+    homogeneous topologies (``chain``/``banded``/``all_to_all``) induce the
+    same topology, which is why tenants get contiguous core ranges.
+    """
+    if not (0 <= lo < hi <= chip.n_cores):
+        raise ValueError(f"core window [{lo}, {hi}) outside chip "
+                         f"[0, {chip.n_cores})")
+    edges = frozenset((a - lo, b - lo) for (a, b) in chip.edges
+                      if lo <= a < hi and lo <= b < hi)
+    return dataclasses.replace(chip, n_cores=hi - lo, edges=edges)
+
+
 # ------------------------------------------------------------ multi-chip mesh
 @dataclasses.dataclass(frozen=True)
 class LinkSpec:
@@ -167,6 +187,20 @@ class ChipMesh:
                 for c in range(self.n_chips - h - 1)):
             h += 1
         return h
+
+
+def submesh(mesh: ChipMesh, lo: int, hi: int) -> ChipMesh:
+    """The induced sub-mesh over the chip window ``[lo, hi)``, relabeled to
+    0-based chip ids (tenant placement over meshes is chip-granular: each
+    tenant owns whole chips, so its cut edges ride links no other tenant's
+    partition chain uses — the shared contention is the host GCU stream)."""
+    if not (0 <= lo < hi <= mesh.n_chips):
+        raise ValueError(f"chip window [{lo}, {hi}) outside mesh "
+                         f"[0, {mesh.n_chips})")
+    links = frozenset((a - lo, b - lo) for (a, b) in mesh.links
+                      if lo <= a < hi and lo <= b < hi)
+    return ChipMesh(chip=mesh.chip, n_chips=hi - lo, links=links,
+                    link=mesh.link)
 
 
 def make_mesh(n_chips: int, chip: ChipSpec = None, topology: str = "chain",

@@ -75,6 +75,22 @@ compute plane — switching planes changes final-ulp bits, not timing).
 The simulator doubles as the correctness oracle harness: with
 ``check_raw=True`` every executed iteration asserts that all SRAM locations it
 reads were previously written (an LCU bug would trip this immediately).
+
+**Request-level serving (ISSUE 4).**  ``run`` accepts per-image ``arrivals``
+(the GCU may not start streaming an image before its arrival cycle), an
+admission bound ``max_inflight`` (started-but-incomplete images), and
+``priorities`` (the GCU picks the highest-priority *arrived* pending image
+at each decision point; FIFO otherwise).  ``SimStats`` then carries
+per-image ``gcu_start_cycle`` / ``completion_cycle`` for latency accounting.
+Multi-tenancy: construct the ``Simulator`` with a *list* of core-disjoint
+programs (see ``compiler.place_tenants``) and tag each image with its
+``tenants`` index — the joint run shares the host GCU/DMA stream and the
+mesh links while every per-core structure stays private, so a tenant's
+outputs are bitwise those of the same program simulated alone.  Each core
+processes its tenant's images in GCU stream-start order (identical to index
+order under FIFO), so priority admission reorders the whole pipeline.  All
+of this holds in BOTH engines with the same bit-identical contract as the
+classic batch run; the defaults reproduce the classic run exactly.
 """
 
 from __future__ import annotations
@@ -145,6 +161,12 @@ class SimStats:
     last_busy: Dict[int, int] = dataclasses.field(default_factory=dict)
     links: Dict[Tuple[int, int], LinkStats] = dataclasses.field(
         default_factory=dict)
+    # Request-level timing (serving runtime): per image, the cycle the GCU
+    # began streaming it and the cycle its last output chunk landed in GMEM.
+    # ``queueing = gcu_start - arrival`` and ``latency = completion - arrival
+    # + 1`` are derived by the runtime; both engines must agree bit-for-bit.
+    gcu_start_cycle: Dict[int, int] = dataclasses.field(default_factory=dict)
+    completion_cycle: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def utilization(self, core: int) -> float:
         if core not in self.first_busy:
@@ -163,10 +185,20 @@ class SimStats:
 
     def chip_utilization(self, mesh: ChipMesh) -> List[float]:
         """Mean core utilization per chip (cores that never ran count 0),
-        averaged over all ``mesh.chip.n_cores`` physical cores."""
+        averaged over all ``mesh.chip.n_cores`` physical cores.
+
+        A busy core outside the mesh's id range is an error, not a silently
+        dropped bucket: on the degenerate ``chips=1`` mesh every core of a
+        wider program used to land on phantom chip ids past ``n_chips`` and
+        vanish from the report."""
         per_chip: Dict[int, float] = defaultdict(float)
         for core in self.busy:
-            per_chip[mesh.chip_of(core)] += self.utilization(core)
+            c = mesh.chip_of(core)
+            if c >= mesh.n_chips:
+                raise ValueError(
+                    f"busy core {core} outside mesh "
+                    f"({mesh.n_chips} chips x {mesh.chip.n_cores} cores)")
+            per_chip[c] += self.utilization(core)
         return [per_chip[c] / mesh.chip.n_cores
                 for c in range(mesh.n_chips)]
 
@@ -201,6 +233,54 @@ def _unflatten(counter: int, bounds: Tuple[int, ...]) -> Point:
     return tuple(reversed(idx))
 
 
+class _RequestPlan:
+    """Validated request-level run parameters, shared by both engines.
+
+    Normalizes arrivals/tenants/priorities to per-image arrays, resolves the
+    effective admission bound (``sequential`` ≡ bound 1 at the GCU), caches
+    the per-tenant expected-output-chunk counts, and exposes the GCU's
+    request-selection ``key`` (FIFO: arrival then index; priority: priority
+    desc, then arrival, then index)."""
+
+    __slots__ = ("arrivals", "tenants", "priorities", "max_inflight",
+                 "out_expected")
+
+    def __init__(self, sim: "Simulator", n_images: int, schedule: str,
+                 arrivals, tenants, max_inflight, priorities):
+        def as_list(x, name, default):
+            if x is None:
+                return [default] * n_images
+            out = [int(v) for v in x]
+            if len(out) != n_images:
+                raise ValueError(f"{name} has {len(out)} entries for "
+                                 f"{n_images} images")
+            return out
+
+        self.arrivals = as_list(arrivals, "arrivals", 0)
+        if any(a < 0 for a in self.arrivals):
+            raise ValueError("arrival cycles must be >= 0")
+        self.tenants = as_list(tenants, "tenants", 0)
+        if any(not 0 <= t < len(sim.progs) for t in self.tenants):
+            raise ValueError(f"tenant index outside the "
+                             f"{len(sim.progs)}-program list")
+        self.priorities = None if priorities is None \
+            else as_list(priorities, "priorities", 0)
+        k = n_images if max_inflight is None else int(max_inflight)
+        if k < 1 and n_images:
+            raise ValueError("max_inflight must be >= 1")
+        if schedule == "sequential":
+            k = min(k, 1)
+        self.max_inflight = k
+        self.out_expected = [
+            {v: sim._expected_chunks(v, tk) for v in p.gcu.outputs}
+            for tk, p in enumerate(sim.progs)]
+
+    def key(self, i: int):
+        if self.priorities is None:
+            return (self.arrivals[i], i)
+        return (-self.priorities[i], self.arrivals[i], i)
+
+
 class Simulator:
     """``engine="event"`` (default) or ``engine="reference"`` (the oracle).
 
@@ -221,16 +301,40 @@ class Simulator:
     identical in timing.
     """
 
-    def __init__(self, program: AcceleratorProgram, chip,
+    def __init__(self, program, chip,
                  mxv_fn=None, check_raw: bool = True, engine: str = "event",
                  mxv_batch_fn=None, compute_plane="auto",
                  strict_float_order: bool = True):
         assert engine in ("event", "reference"), engine
-        self.prog = program
+        # ``program`` may be a single AcceleratorProgram or a sequence of
+        # core-disjoint programs (tenants) co-resident on one chip/mesh.
+        # Tenants share the GCU/DMA stream and the mesh links; everything
+        # per-core (SRAM, frontiers, sends) is private by construction.
+        progs = list(program) if isinstance(program, (list, tuple)) \
+            else [program]
+        if not progs:
+            raise ValueError("need at least one program")
+        self.progs: List[AcceleratorProgram] = progs
+        self.prog = progs[0]    # single-tenant convenience; tenant 0 otherwise
+        self.tenant_of_core: Dict[int, int] = {}
+        self.cores_merged: Dict[int, CoreConfig] = {}
+        for tk, p in enumerate(progs):
+            overlap = set(p.cores) & set(self.cores_merged)
+            if overlap:
+                raise ValueError(
+                    f"tenant {tk} shares cores {sorted(overlap)} with an "
+                    f"earlier tenant — co-residency requires disjoint sets")
+            for cid, cfg in p.cores.items():
+                self.cores_merged[cid] = cfg
+                self.tenant_of_core[cid] = tk
+        meshes = {p.mesh for p in progs}
+        if len(meshes) > 1:
+            raise ValueError("co-resident programs must share one mesh")
+        prog_mesh = next(iter(meshes))
         # ``chip`` may be a single ChipSpec or a ChipMesh; a mesh compiled
         # into the program wins (its link model shaped the lowering).
         self.mesh: Optional[ChipMesh] = (
-            program.mesh if program.mesh is not None
+            prog_mesh if prog_mesh is not None
             else (chip if isinstance(chip, ChipMesh) else None))
         self.chip: ChipSpec = self.mesh.chip if self.mesh is not None \
             else chip
@@ -238,6 +342,10 @@ class Simulator:
         self.strict_float_order = strict_float_order
         self.check_raw = check_raw
         self.engine = engine
+
+    def _values_for(self, cfg: CoreConfig):
+        """The owning tenant's value-shape table for a core config."""
+        return self.progs[self.tenant_of_core[cfg.core_id]].pgraph.graph.values
 
     def _link_for(self, src_core: int, dst_core: int):
         """(extra_delay_fn, link_key) for a core->core message, or (None,
@@ -255,39 +363,82 @@ class Simulator:
 
     # ------------------------------------------------------------------- run
     def run(self, images: List[np.ndarray], schedule: str = "pipelined",
-            max_cycles: int = 1_000_000) -> Tuple[List[Dict[str, np.ndarray]], SimStats]:
+            max_cycles: int = 1_000_000, *, arrivals=None, tenants=None,
+            max_inflight: Optional[int] = None, priorities=None
+            ) -> Tuple[List[Dict[str, np.ndarray]], SimStats]:
+        """Simulate ``images`` through the resident program(s).
+
+        Serving-runtime extensions (defaults reproduce the classic
+        batch-at-cycle-0 run exactly):
+
+        ``arrivals``     — per-image earliest cycle the GCU may begin
+                           streaming it (open-loop request arrival times).
+        ``tenants``      — per-image tenant index into the co-resident
+                           program list (multi-tenant runs only).
+        ``max_inflight`` — admission bound: the GCU starts a new image only
+                           while fewer than this many started images are
+                           incomplete (``schedule="sequential"`` is the
+                           bound-1 special case and keeps its core-side
+                           producer gating on top).
+        ``priorities``   — per-image priority; when given, the GCU picks the
+                           highest-priority *arrived* pending image at each
+                           decision point instead of FIFO (ties: earlier
+                           arrival, then lower image index).
+        """
         assert schedule in ("pipelined", "sequential")
+        n = len(images)
+        plan = _RequestPlan(self, n, schedule, arrivals, tenants,
+                            max_inflight, priorities)
         if self.engine == "reference":
-            return self._run_reference(images, schedule, max_cycles)
-        return _EventEngine(self, images, schedule, max_cycles).run()
+            return self._run_reference(images, schedule, max_cycles, plan)
+        return _EventEngine(self, images, schedule, max_cycles, plan).run()
 
     # =========================================================== reference
-    def _run_reference(self, images, schedule, max_cycles):
-        prog, chip = self.prog, self.chip
+    def _run_reference(self, images, schedule, max_cycles, plan):
+        chip = self.chip
+        progs = self.progs
+        tenants = plan.tenants
         n_images = len(images)
         stats = SimStats()
         inflight: List[Message] = []
         states: Dict[Tuple[int, int], _CoreImageState] = {}
         outputs: List[Dict[str, np.ndarray]] = [
-            {v: np.zeros(s, np.float32) for v, s in prog.gcu.outputs.items()}
-            for _ in range(n_images)]
+            {v: np.zeros(s, np.float32)
+             for v, s in progs[tenants[i]].gcu.outputs.items()}
+            for i in range(n_images)]
         out_counts = [defaultdict(int) for _ in range(n_images)]
-        out_expected = {v: self._expected_chunks(v) for v in prog.gcu.outputs}
         img_complete = [False] * n_images
         core_done = defaultdict(bool)        # (core, image) -> finished
-        part_core = prog.mapping
 
-        # GCU stream cursor
-        gcu_img = 0
-        gcu_pix = 0
-        c_in, ih, iw = prog.gcu.input_shape
-        gcu_total = ih * iw
+        # GCU stream cursor: one shared host DMA across all tenants.  The
+        # current image is picked dynamically among arrived, unstarted
+        # requests (FIFO or priority), subject to the admission bound.
+        cur_req: Optional[int] = None
+        cur_pix = 0
+        started = [False] * n_images
+        gcu_done: set = set()                # images fully streamed
+        n_started = 0
+        K = plan.max_inflight
 
         def state(core: int, img: int) -> _CoreImageState:
             key = (core, img)
             if key not in states:
-                states[key] = _CoreImageState(prog.cores[core])
+                states[key] = _CoreImageState(self.cores_merged[core])
             return states[key]
+
+        # Per-core processing order follows the GCU stream-start order of
+        # the core's tenant (identical to image-index order for FIFO runs).
+        stream_seq: List[List[int]] = [[] for _ in progs]
+        core_pos = defaultdict(int)
+
+        def current_image(core: int) -> Optional[int]:
+            seq = stream_seq[self.tenant_of_core[core]]
+            while core_pos[core] < len(seq) and \
+                    core_done[(core, seq[core_pos[core]])]:
+                core_pos[core] += 1
+            if core_pos[core] < len(seq):
+                return seq[core_pos[core]]
+            return None
 
         for cycle in range(max_cycles):
             progress = False
@@ -301,37 +452,51 @@ class Simulator:
                     self._gmem_write(outputs[m.image], out_counts[m.image], m)
                 else:
                     st = state(m.dst_core, m.image)
-                    self._sram_write(prog.cores[m.dst_core], st, m)
+                    self._sram_write(self.cores_merged[m.dst_core], st, m)
             for im in range(n_images):
                 if not img_complete[im] and all(
-                        out_counts[im][v] >= out_expected[v]
-                        for v in prog.gcu.outputs):
+                        out_counts[im][v] >= plan.out_expected[tenants[im]][v]
+                        for v in progs[tenants[im]].gcu.outputs):
                     img_complete[im] = True
+                    stats.completion_cycle[im] = cycle
 
             # 2. GCU streaming (arrivals next cycle)
-            if gcu_img < n_images:
-                stream_ok = (schedule == "pipelined" or gcu_img == 0
-                             or img_complete[gcu_img - 1])
-                if stream_ok:
-                    for _ in range(chip.dma_pixels_per_cycle):
-                        if gcu_pix >= gcu_total:
-                            break
-                        pi, pj = gcu_pix // iw, gcu_pix % iw
-                        for dst in prog.gcu.dst_cores:
-                            inflight.append(Message(
-                                cycle + 1, dst, gcu_img, prog.gcu.input_value,
-                                "pixel", (0, pi, pj),
-                                images[gcu_img][:, pi, pj].astype(np.float32)))
-                            stats.messages += 1
-                        gcu_pix += 1
-                        progress = True
-                    if gcu_pix >= gcu_total:
-                        gcu_img += 1
-                        gcu_pix = 0
+            if cur_req is None and n_started < n_images:
+                n_live = sum(1 for i in range(n_images)
+                             if started[i] and not img_complete[i])
+                if n_live < K:
+                    cands = [i for i in range(n_images)
+                             if not started[i] and plan.arrivals[i] <= cycle]
+                    if cands:
+                        cur_req = min(cands, key=plan.key)
+                        cur_pix = 0
+                        started[cur_req] = True
+                        n_started += 1
+                        stats.gcu_start_cycle[cur_req] = cycle
+                        stream_seq[tenants[cur_req]].append(cur_req)
+            if cur_req is not None:
+                gcu = progs[tenants[cur_req]].gcu
+                _, ih, iw = gcu.input_shape
+                gcu_total = ih * iw
+                for _ in range(chip.dma_pixels_per_cycle):
+                    if cur_pix >= gcu_total:
+                        break
+                    pi, pj = cur_pix // iw, cur_pix % iw
+                    for dst in gcu.dst_cores:
+                        inflight.append(Message(
+                            cycle + 1, dst, cur_req, gcu.input_value,
+                            "pixel", (0, pi, pj),
+                            images[cur_req][:, pi, pj].astype(np.float32)))
+                        stats.messages += 1
+                    cur_pix += 1
+                    progress = True
+                if cur_pix >= gcu_total:
+                    gcu_done.add(cur_req)
+                    cur_req = None
 
             # 3. core execution (based on start-of-cycle state)
-            for core_id, cfg in prog.cores.items():
-                img = self._core_current_image(core_id, n_images, core_done)
+            for core_id, cfg in self.cores_merged.items():
+                img = current_image(core_id)
                 if img is None:
                     continue
                 st = state(core_id, img)
@@ -341,7 +506,7 @@ class Simulator:
                 if not all(fr.safe(it) for fr in st.frontiers.values()):
                     continue
                 if schedule == "sequential" and not self._producers_done(
-                        cfg, img, core_done, part_core, gcu_img, gcu_pix):
+                        cfg, img, core_done, gcu_done):
                     continue
                 msgs = self._execute_iteration(cfg, st, it, img, cycle,
                                                stats)
@@ -369,7 +534,10 @@ class Simulator:
             if all(img_complete):
                 stats.cycles = cycle + 1
                 return outputs, stats
-            if not progress and not inflight:
+            waiting_arrival = any(not started[i] and plan.arrivals[i] > cycle
+                                  for i in range(n_images))
+            if not progress and not inflight and cur_req is None \
+                    and not waiting_arrival:
                 raise DeadlockError(
                     f"no progress at cycle {cycle}; "
                     f"complete={img_complete}, "
@@ -377,27 +545,22 @@ class Simulator:
         raise DeadlockError(f"max_cycles={max_cycles} exceeded")
 
     # ------------------------------------------------------------- internals
-    def _core_current_image(self, core: int, n_images: int,
-                            core_done) -> Optional[int]:
-        for im in range(n_images):
-            if not core_done[(core, im)]:
-                return im
-        return None
-
     def _producers_done(self, cfg: CoreConfig, img: int, core_done,
-                        part_core, gcu_img: int, gcu_pix: int) -> bool:
+                        gcu_done) -> bool:
+        part_core = self.progs[self.tenant_of_core[cfg.core_id]].mapping
         for lc in cfg.lcu.values():
             src = lc.src_partition
             if src == -1:
-                if gcu_img <= img:  # GCU done with image iff it moved past it
+                if img not in gcu_done:  # GCU must have fully streamed it
                     return False
             elif not core_done[(part_core[src], img)]:
                 return False
         return True
 
-    def _expected_chunks(self, value: str) -> int:
-        shape = self.prog.gcu.outputs[value]
-        core = next(c for c in self.prog.cores.values()
+    def _expected_chunks(self, value: str, tenant: int = 0) -> int:
+        prog = self.progs[tenant]
+        shape = prog.gcu.outputs[value]
+        core = next(c for c in prog.cores.values()
                     for s in c.sends if s.value == value and s.to_gmem)
         spec = next(s for s in core.sends if s.value == value)
         if spec.write.kind in ("full", "reduce"):
@@ -521,7 +684,7 @@ class Simulator:
             elif n.op in ("maxpool2d", "avgpool2d"):
                 out = n.outputs[0]
                 k, s = n.attrs["k"], n.attrs["stride"]
-                shp = self.prog.pgraph.graph.values[out].shape
+                shp = self._values_for(cfg)[out].shape
                 if out not in st.pool_acc:
                     init = -np.inf if n.op == "maxpool2d" else 0.0
                     st.pool_acc[out] = np.full(shp, init, np.float32)
@@ -543,7 +706,7 @@ class Simulator:
                             pooled_ready[out] = ((ph, pw), acc[:, ph, pw].copy())
             elif n.op == "global_avgpool":
                 out = n.outputs[0]
-                src_shape = self.prog.pgraph.graph.values[n.inputs[0]].shape
+                src_shape = self._values_for(cfg)[n.inputs[0]].shape
                 if out not in st.reduce_acc:
                     st.reduce_acc[out] = np.zeros(src_shape[0], np.float32)
                 st.reduce_acc[out] += pix(n.inputs[0])
@@ -706,14 +869,15 @@ class _Stream:
 
 
 class _EvCore:
-    __slots__ = ("cfg", "order", "total", "cur_img", "next_free",
+    __slots__ = ("cfg", "order", "tenant", "total", "pos", "next_free",
                  "ridx", "p0", "p1", "locs", "win_idx")
 
-    def __init__(self, cfg: CoreConfig, order: int):
+    def __init__(self, cfg: CoreConfig, order: int, tenant: int):
         self.cfg = cfg
         self.order = order
+        self.tenant = tenant
         self.total = int(np.prod(cfg.iter_bounds))
-        self.cur_img = 0
+        self.pos = 0        # index into the tenant's GCU stream-start order
         self.next_free = 0
         # The whole iteration space unflattened once; batches slice views.
         idx = np.arange(self.total)
@@ -746,49 +910,63 @@ _PH_DELIVER, _PH_GCU, _PH_CORE = 0, 1, 2
 
 
 class _EventEngine:
-    def __init__(self, sim: Simulator, images, schedule: str, max_cycles: int):
+    def __init__(self, sim: Simulator, images, schedule: str, max_cycles: int,
+                 plan: _RequestPlan):
         self.sim = sim
-        self.prog = sim.prog
+        self.progs = sim.progs
         self.chip = sim.chip
         self.images = images
         self.schedule = schedule
         self.max_cycles = max_cycles
         self.n_images = len(images)
+        self.plan = plan
+        self.tenants = plan.tenants
 
         self.cores: Dict[int, _EvCore] = {
-            cid: _EvCore(cfg, i)
-            for i, (cid, cfg) in enumerate(self.prog.cores.items())}
+            cid: _EvCore(cfg, i, sim.tenant_of_core[cid])
+            for i, (cid, cfg) in enumerate(sim.cores_merged.items())}
         self._rel = np.arange(max(c.total for c in self.cores.values())
                               if self.cores else 1)
-        self.part_core = self.prog.mapping
-        # sequential-schedule wakeups: partition -> consumer core ids
-        self.consumers: Dict[int, List[int]] = defaultdict(list)
-        self.gcu_consumers: List[int] = []
-        for cid, cfg in self.prog.cores.items():
+        self.part_core = [p.mapping for p in self.progs]
+        # sequential-schedule wakeups: (tenant, partition) -> consumer cores
+        self.consumers: Dict[Tuple[int, int], List[int]] = defaultdict(list)
+        self.gcu_consumers: List[List[int]] = [[] for _ in self.progs]
+        for cid, cfg in sim.cores_merged.items():
+            tk = sim.tenant_of_core[cid]
             for lc in cfg.lcu.values():
                 if lc.src_partition == -1:
-                    self.gcu_consumers.append(cid)
+                    self.gcu_consumers[tk].append(cid)
                 else:
-                    self.consumers[lc.src_partition].append(cid)
+                    self.consumers[(tk, lc.src_partition)].append(cid)
         self._raw_ops = {cid: self._compile_raw_ops(cfg)
-                         for cid, cfg in self.prog.cores.items()}
+                         for cid, cfg in sim.cores_merged.items()}
         self._pool_tabs: Dict[Tuple[int, str], tuple] = {}
         self.strict_float = sim.strict_float_order
 
         self.states: Dict[Tuple[int, int], _EvState] = {}
         self.outputs = [
-            {v: np.zeros(s, np.float32) for v, s in self.prog.gcu.outputs.items()}
-            for _ in range(self.n_images)]
+            {v: np.zeros(s, np.float32)
+             for v, s in self.progs[self.tenants[i]].gcu.outputs.items()}
+            for i in range(self.n_images)]
         self.out_counts = [defaultdict(int) for _ in range(self.n_images)]
-        self.out_expected = {v: sim._expected_chunks(v)
-                             for v in self.prog.gcu.outputs}
+        self.out_expected = plan.out_expected
         self.img_complete = [False] * self.n_images
         self.complete_cycle: Dict[int, int] = {}   # img -> exact cycle
         self.out_last_arrive = [0] * self.n_images
         self.done_cycle: Dict[Tuple[int, int], int] = {}
         self.gcu_done_cycle: Dict[int, int] = {}
-        self.gcu_waiting: Optional[int] = None
         self.t_end: Optional[int] = None
+
+        # GCU request-selection state (shared host DMA across tenants): the
+        # stream-start order per tenant doubles as each core's processing
+        # order, so priority admission reorders the whole pipeline, not just
+        # the injection.
+        self.gcu_unstarted = list(range(self.n_images))
+        self.gcu_free_at = 0
+        self.gcu_inflight = 0
+        self.gcu_blocked = False
+        self.gcu_start: Dict[int, int] = {}
+        self.stream_seq: List[List[int]] = [[] for _ in self.progs]
 
         self.heap: List[tuple] = []
         self._seq = 0
@@ -831,10 +1009,18 @@ class _EventEngine:
         key = (cid, img)
         st = self.states.get(key)
         if st is None:
-            st = _EvState(self.prog.cores[cid], self.sim.check_raw)
+            st = _EvState(self.sim.cores_merged[cid], self.sim.check_raw)
             self.states[key] = st
             self._mem_events.append((t, cid, st.sram_bytes, 1))
         return st
+
+    def _current_image(self, core: _EvCore) -> Optional[int]:
+        """The core's current image: next in its tenant's GCU stream-start
+        order (None while the next one hasn't begun streaming)."""
+        seq = self.stream_seq[core.tenant]
+        if core.pos < len(seq):
+            return seq[core.pos]
+        return None
 
     def _retire_state(self, cid: int, st: _EvState, t: int) -> None:
         pool = sum(b.nbytes for b in st.pool_acc.values())
@@ -849,7 +1035,7 @@ class _EventEngine:
 
         for cid in self.cores:
             self._sched_core(cid, 0)
-        self._push(0, _PH_GCU, 0, "gcu", 0)
+        self._push(min(self.plan.arrivals), _PH_GCU, 0, "gcu", 0)
 
         heap = self.heap
         while heap:
@@ -862,6 +1048,8 @@ class _EventEngine:
                 self._deliver(cycle, data)
             elif kind == "gcu":
                 self._gcu_stream(cycle, data)
+            elif kind == "admit":
+                self._gcu_retire(cycle, data)
             else:  # "core"
                 self._sched_keys.discard((data, cycle))
                 self._core_step(cycle, data)
@@ -904,6 +1092,8 @@ class _EventEngine:
             ls.messages += n
             ls.bytes += n * row_bytes
             ls.busy += n * occ
+        stats.gcu_start_cycle = dict(self.gcu_start)
+        stats.completion_cycle = dict(self.complete_cycle)
         self._replay_high_water(stats)
         return stats
 
@@ -935,18 +1125,30 @@ class _EventEngine:
                     stats.sram_high_water[cid] = cur[cid]
 
     # ------------------------------------------------------------------ GCU
-    def _gcu_stream(self, t: int, img: int) -> None:
-        if self.schedule == "sequential" and img > 0:
-            prev = self.complete_cycle.get(img - 1)
-            if prev is None:
-                self.gcu_waiting = img     # resumed by the completing delivery
-                return
-            if prev > t:
-                # previous image completes at a known future cycle: streaming
-                # resumes that same cycle (delivery phase precedes GCU phase)
-                self._push(prev, _PH_GCU, 0, "gcu", img)
-                return
-        gcu = self.prog.gcu
+    # The GCU is one shared host DMA: at each decision point it picks the
+    # next request among the *arrived*, unstarted images (FIFO or priority
+    # key), subject to the admission bound, and streams it back-to-back.
+    # Decision points: the GCU going free, a future arrival, or — when
+    # blocked on the bound — an image completing (the "admit" event, timed
+    # at the completion cycle so both engines see the same in-flight count).
+    def _gcu_stream(self, t: int, _img_unused: int) -> None:
+        if not self.gcu_unstarted or t < self.gcu_free_at:
+            return
+        if self.gcu_inflight >= self.plan.max_inflight:
+            self.gcu_blocked = True        # resumed by the next retirement
+            return
+        arr = self.plan.arrivals
+        cands = [i for i in self.gcu_unstarted if arr[i] <= t]
+        if not cands:
+            self._push(min(arr[i] for i in self.gcu_unstarted),
+                       _PH_GCU, 0, "gcu", 0)
+            return
+        img = min(cands, key=self.plan.key)
+        self.gcu_unstarted.remove(img)
+        self.gcu_inflight += 1
+        self.gcu_start[img] = t
+        tk = self.tenants[img]
+        gcu = self.progs[tk].gcu
         c_in, ih, iw = gcu.input_shape
         total = ih * iw
         dma = self.chip.dma_pixels_per_cycle
@@ -964,11 +1166,28 @@ class _EventEngine:
         self.gcu_log.append((send_cycles, len(gcu.dst_cores)))
         end = int(send_cycles[-1])
         self.gcu_done_cycle[img] = end
+        # the image becomes the tenant's cores' next work item the cycle its
+        # streaming starts (reference phase order: GCU before core exec)
+        self.stream_seq[tk].append(img)
+        for cid in self.progs[tk].cores:
+            core = self.cores[cid]
+            if core.pos == len(self.stream_seq[tk]) - 1:
+                self._sched_core(cid, t)
         if self.schedule == "sequential":
-            for cid in self.gcu_consumers:
+            for cid in self.gcu_consumers[tk]:
                 self._sched_core(cid, end)
-        if img + 1 < self.n_images:
-            self._push(end + 1, _PH_GCU, 0, "gcu", img + 1)
+        self.gcu_free_at = end + 1
+        if self.gcu_unstarted:
+            self._push(end + 1, _PH_GCU, 0, "gcu", 0)
+
+    def _gcu_retire(self, t: int, img: int) -> None:
+        """An in-flight image completed (fired at its exact completion
+        cycle, delivery phase — the same cycle the reference engine's
+        admission gate sees the slot free)."""
+        self.gcu_inflight -= 1
+        if self.gcu_blocked and self.gcu_inflight < self.plan.max_inflight:
+            self.gcu_blocked = False
+            self._push(t, _PH_GCU, 0, "gcu", 0)
 
     # ------------------------------------------------------------- delivery
     # Streams are delivered in ONE event at their first arrival cycle: SRAM
@@ -994,19 +1213,20 @@ class _EventEngine:
         if s.arrive[-1] > last:
             last = int(s.arrive[-1])
             self.out_last_arrive[s.img] = last
+        tk = self.tenants[s.img]
         if not self.img_complete[s.img] and all(
-                counts[v] >= self.out_expected[v]
-                for v in self.prog.gcu.outputs):
+                counts[v] >= self.out_expected[tk][v]
+                for v in self.progs[tk].gcu.outputs):
             self.img_complete[s.img] = True
             self.complete_cycle[s.img] = last
             if self.t_end is None and all(self.img_complete):
                 self.t_end = max(self.complete_cycle.values())
-            if self.gcu_waiting == s.img + 1:
-                self._push(max(t, last), _PH_GCU, 0, "gcu", self.gcu_waiting)
-                self.gcu_waiting = None
+            # in-flight slot frees at the exact completion cycle, which may
+            # lie past this bulk delivery's pop cycle
+            self._push(last, _PH_DELIVER, 1, "admit", s.img)
 
     def _sram_stream(self, t: int, s: _Stream) -> None:
-        cfg = self.prog.cores[s.dst]
+        cfg = self.sim.cores_merged[s.dst]
         st = self._state(s.dst, s.img, t)
         lc = cfg.lcu[s.value]
         buf = st.sram[s.value]
@@ -1027,7 +1247,7 @@ class _EventEngine:
         # new iterations, so the core wake would be a no-op
         if advanced:
             core = self.cores[s.dst]
-            if s.img == core.cur_img:
+            if s.img == self._current_image(core):
                 self._sched_core(s.dst, t)
 
     # -------------------------------------------------------- core execution
@@ -1040,6 +1260,7 @@ class _EventEngine:
         producer has not finished yet.
         """
         my_order = self.cores[cid].order
+        tk = self.cores[cid].tenant
         g = 0
         for lc in cfg.lcu.values():
             if lc.src_partition == -1:
@@ -1048,7 +1269,7 @@ class _EventEngine:
                     return None
                 g = max(g, dc)
             else:
-                pc = self.part_core[lc.src_partition]
+                pc = self.part_core[tk][lc.src_partition]
                 d = self.done_cycle.get((pc, img))
                 if d is None:
                     return None
@@ -1057,9 +1278,9 @@ class _EventEngine:
 
     def _core_step(self, t: int, cid: int) -> None:
         core = self.cores[cid]
-        if core.cur_img >= self.n_images:
-            return
-        img = core.cur_img
+        img = self._current_image(core)
+        if img is None:
+            return       # next image not streamed yet: woken at stream start
         cfg = core.cfg
         # the reference engine only *considers* this image once the previous
         # one retired (done + 1 == next_free), so a first-touch creation here
@@ -1098,11 +1319,14 @@ class _EventEngine:
             last_cycle = int(cycles[-1])
             self._retire_state(cid, st, last_cycle)
             self.done_cycle[(cid, img)] = last_cycle
-            core.cur_img += 1
-            if core.cur_img < self.n_images:
+            core.pos += 1
+            if self._current_image(core) is not None:
                 self._sched_core(cid, last_cycle + 1)
+            # else: the next image hasn't begun streaming; the GCU wakes
+            # this core the cycle it does
             if self.schedule == "sequential":
-                for cid2 in self.consumers.get(cfg.partition_idx, ()):
+                for cid2 in self.consumers.get((core.tenant,
+                                                cfg.partition_idx), ()):
                     self._sched_core(cid2, last_cycle)
                     self._sched_core(cid2, last_cycle + 1)
 
@@ -1201,7 +1425,7 @@ class _EventEngine:
             elif n.op in ("maxpool2d", "avgpool2d"):
                 out = n.outputs[0]
                 kk = n.attrs["k"]
-                shp = self.prog.pgraph.graph.values[out].shape
+                shp = self.sim._values_for(cfg)[out].shape
                 acc = st.pool_acc.get(out)
                 if acc is None:
                     init = -np.inf if n.op == "maxpool2d" else 0.0
@@ -1230,7 +1454,7 @@ class _EventEngine:
                     pooled_rows[out] = (di, comp[di])
             elif n.op == "global_avgpool":
                 out = n.outputs[0]
-                src_shape = self.prog.pgraph.graph.values[n.inputs[0]].shape
+                src_shape = self.sim._values_for(cfg)[n.inputs[0]].shape
                 racc = st.reduce_acc.get(out)
                 if racc is None:
                     racc = np.zeros(src_shape[0], np.float32)

@@ -1,0 +1,320 @@
+"""Request-level serving runtime over the cycle-accurate CM simulator.
+
+``CmServer`` turns the simulator from a batch-cycle counter into a serving
+testbed: requests carry *arrival cycles* (open-loop rate sweeps, closed-loop
+think-time populations — see ``runtime.workload``), the GCU admits them
+under a policy (FIFO or priority, optionally bounded in-flight), and the
+report carries per-request queueing + service latency, p50/p99, and
+achieved-vs-offered throughput.  Multi-tenancy: a ``TenantPlacement``
+(``core.place_tenants``) co-resides several compiled models on disjoint
+core sets of one chip/mesh; the joint simulation shares GCU/DMA and link
+contention while per-tenant outputs stay bitwise equal to each tenant
+simulated alone (weight-stationary residency: nothing but timing is
+shared).
+
+The request type extends the JAX batcher's ``serve.Request`` — the serving
+surface is one vocabulary whether the backend is a decode-slot batcher or
+the CM pipeline.
+
+Everything is deterministic: same seed + same config => identical
+per-request latencies, across both simulator engines and repeated runs
+(``tests/test_runtime.py`` asserts this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.compiler import TenantPlacement
+from repro.core.hwspec import ChipMesh, ChipSpec
+from repro.core.lowering import AcceleratorProgram
+from repro.core.simulator import SimStats, Simulator
+from repro.serve.scheduler import Request
+
+from .workload import rate_sweep
+
+
+@dataclasses.dataclass
+class CmRequest(Request):
+    """One inference request against the CM pipeline.
+
+    Inherits the batcher's identity/bookkeeping fields (``rid``, ``done``)
+    and adds the image payload plus cycle-domain timing, filled in by
+    ``CmServer``: ``gcu_start`` (streaming began = service start),
+    ``completion`` (last output chunk in GMEM), and the derived
+    queueing/service/latency splits.
+    """
+
+    image: Optional[np.ndarray] = None
+    arrival: int = 0
+    tenant: int = 0
+    priority: int = 0
+    # filled by the server:
+    gcu_start: Optional[int] = None
+    completion: Optional[int] = None
+    output: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def queue_cycles(self) -> int:
+        return self.gcu_start - self.arrival
+
+    @property
+    def service_cycles(self) -> int:
+        return self.completion - self.gcu_start + 1
+
+    @property
+    def latency_cycles(self) -> int:
+        return self.completion - self.arrival + 1
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Per-request timing + the joint ``SimStats`` of one drained run."""
+
+    requests: List[CmRequest]
+    stats: SimStats
+    n_tenants: int = 1
+
+    def by_rid(self) -> Dict[int, CmRequest]:
+        """Requests keyed by rid (``requests`` itself is in arrival order)."""
+        return {r.rid: r for r in self.requests}
+
+    def _sel(self, tenant: Optional[int]) -> List[CmRequest]:
+        if tenant is None:
+            return self.requests
+        return [r for r in self.requests if r.tenant == tenant]
+
+    def latencies(self, tenant: Optional[int] = None) -> np.ndarray:
+        return np.array([r.latency_cycles for r in self._sel(tenant)],
+                        np.int64)
+
+    def queue_delays(self, tenant: Optional[int] = None) -> np.ndarray:
+        return np.array([r.queue_cycles for r in self._sel(tenant)],
+                        np.int64)
+
+    def percentile(self, p: float, tenant: Optional[int] = None) -> float:
+        lat = self.latencies(tenant)
+        if not len(lat):        # tenant saw no traffic this drain window
+            return float("nan")
+        return float(np.percentile(lat, p))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99)
+
+    @property
+    def makespan(self) -> int:
+        return self.stats.cycles
+
+    @property
+    def achieved_rate(self) -> float:
+        """Completed images per cycle over the whole run."""
+        return len(self.requests) / max(1, self.stats.cycles)
+
+    def table(self) -> str:
+        """Human-readable per-request latency table."""
+        lines = [f"{'rid':>4} {'ten':>3} {'pri':>3} {'arrive':>7} "
+                 f"{'start':>7} {'done':>7} {'queue':>6} {'svc':>6} "
+                 f"{'latency':>7}"]
+        for r in self.requests:
+            lines.append(
+                f"{r.rid:>4} {r.tenant:>3} {r.priority:>3} {r.arrival:>7} "
+                f"{r.gcu_start:>7} {r.completion:>7} {r.queue_cycles:>6} "
+                f"{r.service_cycles:>6} {r.latency_cycles:>7}")
+        lines.append(
+            f"p50={self.p50:.0f}  p99={self.p99:.0f}  "
+            f"makespan={self.makespan}  "
+            f"achieved={self.achieved_rate:.5f} img/cycle")
+        return "\n".join(lines)
+
+
+class CmServer:
+    """Arrival-driven, admission-controlled serving over the CM simulator.
+
+    ``placement`` is a :class:`TenantPlacement`, a single
+    ``AcceleratorProgram``, or a list of core-disjoint programs.  ``chip``
+    is required only when no mesh is compiled into the program(s).
+
+    Admission contract: the GCU (one shared host DMA across tenants)
+    streams one image at a time; at each decision point it picks among the
+    *arrived*, not-yet-started requests — FIFO (``policy="fifo"``: earliest
+    arrival, ties by rid) or ``policy="priority"`` (highest priority, then
+    earliest arrival, then rid) — and only while fewer than
+    ``max_inflight`` started requests are incomplete.  Downstream, each
+    core processes its tenant's requests in GCU start order, so priority
+    reorders the whole pipeline, not just injection.
+    """
+
+    def __init__(self, placement, chip=None, *,
+                 engine: str = "event", compute_plane="auto",
+                 schedule: str = "pipelined",
+                 max_inflight: Optional[int] = None,
+                 policy: str = "fifo",
+                 check_raw: bool = False,
+                 strict_float_order: bool = True,
+                 max_cycles: int = 5_000_000):
+        if policy not in ("fifo", "priority"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        if isinstance(placement, TenantPlacement):
+            self.placement: Optional[TenantPlacement] = placement
+            programs: List[AcceleratorProgram] = placement.programs
+            if chip is None:
+                chip = placement.mesh if placement.mesh is not None \
+                    else placement.chip
+        else:
+            self.placement = None
+            programs = list(placement) \
+                if isinstance(placement, (list, tuple)) else [placement]
+            if chip is None:
+                meshes = [p.mesh for p in programs if p.mesh is not None]
+                if not meshes:
+                    raise ValueError("chip= required when no mesh is "
+                                     "compiled into the program(s)")
+                chip = meshes[0]
+        self.programs = programs
+        self.policy = policy
+        self.max_inflight = max_inflight
+        self.schedule = schedule
+        self.max_cycles = max_cycles
+        self.sim = Simulator(programs if len(programs) > 1 else programs[0],
+                             chip, engine=engine,
+                             compute_plane=compute_plane,
+                             check_raw=check_raw,
+                             strict_float_order=strict_float_order)
+        self.pending: List[CmRequest] = []
+        self._next_rid = 0
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.programs)
+
+    # ------------------------------------------------------------ submission
+    def submit(self, req: CmRequest) -> CmRequest:
+        if req.image is None:
+            raise ValueError(f"request {req.rid} has no image payload")
+        if not 0 <= req.tenant < self.n_tenants:
+            raise ValueError(f"request {req.rid}: tenant {req.tenant} "
+                             f"outside [0, {self.n_tenants})")
+        if any(r.rid == req.rid for r in self.pending):
+            raise ValueError(f"duplicate rid {req.rid} in pending queue")
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self.pending.append(req)
+        return req
+
+    def submit_image(self, image: np.ndarray, arrival: int = 0,
+                     tenant: int = 0, priority: int = 0) -> CmRequest:
+        req = CmRequest(rid=self._next_rid, image=image, arrival=int(arrival),
+                        tenant=int(tenant), priority=int(priority))
+        self._next_rid += 1
+        return self.submit(req)
+
+    # --------------------------------------------------------------- serving
+    def drain(self) -> ServeReport:
+        """Simulate all pending requests to completion and clear the queue."""
+        reqs, self.pending = self.pending, []
+        return self.serve(reqs)
+
+    def serve(self, requests: Sequence[CmRequest]) -> ServeReport:
+        """One joint cycle-accurate run of ``requests`` (re-runnable; the
+        server holds no cross-run simulator state)."""
+        if not requests:
+            raise ValueError("no requests to serve")
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("duplicate rids in request batch")
+        # image-index order = FIFO base order (arrival, then rid): the
+        # engines' own selection loop handles any dynamic reordering
+        ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        images = [r.image for r in ordered]
+        arrivals = [r.arrival for r in ordered]
+        tenants = [r.tenant for r in ordered]
+        priorities = [r.priority for r in ordered] \
+            if self.policy == "priority" else None
+        outputs, stats = self.sim.run(
+            images, schedule=self.schedule, max_cycles=self.max_cycles,
+            arrivals=arrivals, tenants=tenants,
+            max_inflight=self.max_inflight, priorities=priorities)
+        for i, r in enumerate(ordered):
+            r.gcu_start = stats.gcu_start_cycle[i]
+            r.completion = stats.completion_cycle[i]
+            r.output = outputs[i]
+            r.done = True
+        return ServeReport(requests=list(ordered), stats=stats,
+                           n_tenants=self.n_tenants)
+
+    def serve_images(self, images: Sequence[np.ndarray], arrivals,
+                     tenants=None, priorities=None) -> ServeReport:
+        """Convenience: wrap raw arrays into requests and serve them."""
+        n = len(images)
+        tenants = [0] * n if tenants is None else list(tenants)
+        priorities = [0] * n if priorities is None else list(priorities)
+        reqs = [CmRequest(rid=i, image=images[i], arrival=int(arrivals[i]),
+                          tenant=tenants[i], priority=priorities[i])
+                for i in range(n)]
+        return self.serve(reqs)
+
+
+# ------------------------------------------------------------- measurements
+def load_sweep(server: CmServer, images: Sequence[np.ndarray],
+               rates: Sequence[float], kind: str = "poisson",
+               seed: int = 0, tenants=None) -> List[Dict[str, float]]:
+    """Serve the same image set at each offered rate; one row per rate.
+
+    The canonical serving curve: offered load (images/cycle) vs achieved
+    throughput and p50/p99 latency — p99 must rise with offered load as
+    queueing at the GCU admission point builds up.
+    """
+    rows = []
+    for rate, arr in rate_sweep(rates, len(images), kind=kind, seed=seed):
+        rep = server.serve_images(images, arrivals=arr, tenants=tenants)
+        rows.append({
+            "offered_rate": float(rate),
+            "achieved_rate": rep.achieved_rate,
+            "p50_latency": rep.p50,
+            "p99_latency": rep.p99,
+            "mean_queue": float(rep.queue_delays().mean()),
+            "makespan": rep.makespan,
+        })
+    return rows
+
+
+def split_stats(stats: SimStats, placement: TenantPlacement,
+                tenants_of_images: Sequence[int]) -> List[SimStats]:
+    """Per-tenant views of a joint run's ``SimStats``.
+
+    Separable fields — per-core busy/utilization spans, SRAM high water,
+    per-request GCU start/completion — are filtered by the tenant's core
+    range (and image set).  ``cycles`` is the joint makespan.  Messages and
+    bytes are *shared-fabric* totals and deliberately not split; mesh link
+    records are attributed to a tenant only when both endpoint chips lie in
+    its chip range (always true under chip-granular placement).
+    """
+    out = []
+    cpc = placement.chip.n_cores
+    for tk, (lo, hi) in enumerate(placement.core_ranges):
+        s = SimStats(cycles=stats.cycles)
+        s.busy.update({c: b for c, b in stats.busy.items() if lo <= c < hi})
+        s.first_busy = {c: v for c, v in stats.first_busy.items()
+                        if lo <= c < hi}
+        s.last_busy = {c: v for c, v in stats.last_busy.items()
+                       if lo <= c < hi}
+        s.sram_high_water.update({c: v for c, v in
+                                  stats.sram_high_water.items()
+                                  if lo <= c < hi})
+        s.gcu_start_cycle = {i: v for i, v in stats.gcu_start_cycle.items()
+                             if tenants_of_images[i] == tk}
+        s.completion_cycle = {i: v for i, v in stats.completion_cycle.items()
+                              if tenants_of_images[i] == tk}
+        if placement.mesh is not None:
+            clo, chi = lo // cpc, -(-hi // cpc)
+            s.links = {k: v for k, v in stats.links.items()
+                       if clo <= k[0] < chi and clo <= k[1] < chi}
+        out.append(s)
+    return out

@@ -1,3 +1,4 @@
 from .engine import ServeEngine
+from .scheduler import ContinuousBatcher, Request
 
-__all__ = ["ServeEngine"]
+__all__ = ["ContinuousBatcher", "Request", "ServeEngine"]

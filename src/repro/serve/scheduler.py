@@ -30,9 +30,18 @@ from repro.models import build_model
 
 @dataclasses.dataclass
 class Request:
+    """One serving request.
+
+    Shared by the JAX continuous batcher (``prompt``/``max_new``/``out``
+    drive the decode loop) and — via the ``runtime.CmRequest`` subclass —
+    the cycle-accurate CM serving runtime, which adds the image payload and
+    arrival/latency bookkeeping.  ``prompt``/``max_new`` default to empty so
+    non-token workloads can construct the base type directly.
+    """
+
     rid: int
-    prompt: np.ndarray                  # (S_p,) int32
-    max_new: int
+    prompt: Optional[np.ndarray] = None   # (S_p,) int32
+    max_new: int = 0
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
