@@ -22,8 +22,8 @@ import time
 import numpy as np
 
 from repro.core import (Simulator, build_lenet_like,
-                        build_resnet_block_chain, compile_model, make_chip,
-                        make_mesh)
+                        build_resnet_block_chain, build_tiny_transformer,
+                        compile_model, make_chip, make_mesh)
 
 
 def _run_engine(prog, chip, images, engine, plane):
@@ -48,10 +48,13 @@ def run(smoke: bool = False) -> list:
         ("lenet", build_lenet_like(), 8, (1, 12, 12)),
         ("resnet2", build_resnet_block_chain(2), 8, (4, 8, 8)),
         ("resnet4", build_resnet_block_chain(4), 12, (4, 8, 8)),
+        # transformer encoder block (ISSUE 5): layernorm/softmax/dynamic
+        # matmul on the DPU, 1x1-conv projections on the crossbars
+        ("tiny_xfmr", build_tiny_transformer(), 12, (8, 4, 1)),
     ]
     image_counts = (1, 4, 8)
     if smoke:
-        cases = cases[:1]
+        cases = [cases[0], cases[-1]]    # one CNN + the transformer case
         image_counts = (1,)
     rng = np.random.default_rng(0)
     for name, graph, cores, shp in cases:
@@ -118,8 +121,10 @@ def run_mesh(smoke: bool = False) -> list:
     """
     rows = []
     # resnet4 -> 8 partitions; 6-core chips force a cut (capacity), the DP
-    # places it at the cheapest block boundary
-    cases = [("resnet4", build_resnet_block_chain(4), 6, 2, (4, 8, 8))]
+    # places it at the cheapest block boundary.  tiny_xfmr -> 10 partitions;
+    # the cut lands where the attention pipeline crosses into the MLP.
+    cases = [("resnet4", build_resnet_block_chain(4), 6, 2, (4, 8, 8)),
+             ("tiny_xfmr", build_tiny_transformer(), 6, 2, (8, 4, 1))]
     image_counts = (1,) if smoke else (1, 4, 8)
     rng = np.random.default_rng(0)
     for name, graph, cores_per_chip, n_chips, shp in cases:

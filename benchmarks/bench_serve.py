@@ -22,9 +22,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.base import smoke_config
-from repro.core import (Simulator, build_fig2_graph,
-                        build_resnet_block_chain, compile_model, make_chip,
-                        place_tenants)
+from repro.core import (build_fig2_graph, build_resnet_block_chain,
+                        compile_model, make_chip, place_tenants)
 from repro.runtime import CmRequest, CmServer, load_sweep, split_stats
 from repro.serve.scheduler import ContinuousBatcher, Request
 

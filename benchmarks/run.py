@@ -10,13 +10,29 @@ Run: PYTHONPATH=src python -m benchmarks.run [--only pipeline,...] [--smoke]
 
 ``--smoke`` runs every bench at its smallest case (for CI wall-clock): each
 bench whose ``run`` accepts a ``smoke`` flag shrinks its case list; the rest
-run unchanged.
+run unchanged.  ``--only`` takes a comma-separated subset of bench names
+(unknown names are an error, not a silent no-op) so CI legs and local
+iteration don't pay for the full suite.
 
 Besides the human-readable dump, every bench writes a machine-readable
 ``BENCH_<name>.json`` (``--json-dir``, default CWD) so the perf trajectory —
 wall-clock per engine/compute-plane, cycles, messages — is tracked across
 PRs.  Failures are recorded in the JSON too (``error`` field) rather than
 silently dropping the file.
+
+``--check`` is the CI perf-regression gate: after running, every row is
+compared against the committed baseline ``BENCH_<name>.json`` found in
+``--baseline-dir`` (default: the repo checkout, i.e. the committed files).
+Rows are matched by their non-perf identity fields (case/mode strings etc.);
+rows whose identity is not unique on both sides are skipped (and reported),
+never mis-paired.  Simulated counters (``cycles``/``messages``/``bytes``
+and ``*_cycles``) must match **exactly** — the simulator is deterministic,
+so any drift is a timing-model change that must be re-committed on purpose.
+Wall-clock fields (``*_ms``) regress when
+``new > max(tolerance * base, base + wall_slack_ms)`` — the multiplicative
+factor catches real slowdowns on big rows, the absolute slack keeps
+millisecond-sized rows from flapping on noisy CI runners.  Any regression
+exits non-zero.
 """
 
 from __future__ import annotations
@@ -27,14 +43,116 @@ import json
 import pathlib
 import sys
 
+# Role-explicit field taxonomy (every row field falls in exactly one class):
+#   EXACT    — deterministic simulated counters, compared exactly
+#   WALL     — wall-clock measurements, compared with tolerance
+#   EXCLUDED — wall-derived ratios/throughputs and machine-sensitive floats:
+#              too noisy to gate on, too noisy to be identity
+#   identity — every other scalar: matches a row to its baseline row
+EXACT_KEYS = ("cycles", "messages", "makespan", "p50_latency", "p99_latency",
+              "steps", "prefills", "busy_cores")
+EXCLUDED_KEYS = ("tok_per_s", "decode_tok_per_s", "loss_drop")
+
+
+def _is_exact_key(k: str) -> bool:
+    return k in EXACT_KEYS or k.endswith("_cycles")
+
+
+def _is_wall_key(k: str) -> bool:
+    return k.endswith("_ms")
+
+
+def _is_excluded_key(k: str) -> bool:
+    # *_speedup are wall-clock ratios; *_ns_per_write are micro-timings too
+    # jittery at smoke reps to gate on (the lcu contract is carried by its
+    # deterministic gen_code_bytes/table_entries identity fields instead)
+    return (k in EXCLUDED_KEYS or k.endswith("_speedup")
+            or k.endswith("_ns_per_write"))
+
+
+def _row_identity(row: dict):
+    """Hashable identity of a row: every scalar field that is neither a
+    perf measurement nor excluded.  Floats participate — rate/utilization
+    fields are deterministic simulator outputs and are what distinguishes
+    e.g. the serve load-sweep rows from one another."""
+    ident = []
+    for k, v in row.items():
+        if _is_exact_key(k) or _is_wall_key(k) or _is_excluded_key(k):
+            continue
+        if isinstance(v, (str, bool, int, float)):
+            ident.append((k, v))
+    return tuple(sorted(ident))
+
+
+def _unique_rows(rows):
+    """Rows keyed by identity.  Rows whose identity is not unique cannot be
+    matched reliably; they are dropped, and the dropped count is returned so
+    the caller reports them as skipped rather than silently vanished."""
+    by_id = {}
+    counts = {}
+    for r in rows:
+        ident = _row_identity(r)
+        counts[ident] = counts.get(ident, 0) + 1
+        by_id[ident] = r
+    n_dupes = sum(c for c in counts.values() if c > 1)
+    return {i: r for i, r in by_id.items() if counts[i] == 1}, n_dupes
+
+
+def check_rows(name: str, rows, baseline_rows, tolerance: float,
+               wall_slack_ms: float):
+    """Compare a bench's rows to the committed baseline.
+
+    Returns ``(regressions, n_compared, n_skipped)`` — ``n_skipped`` counts
+    rows that could not be compared (duplicate identity on the current
+    side, or no unique baseline row with that identity).
+    """
+    cur, cur_dupes = _unique_rows(rows)
+    base, _ = _unique_rows(baseline_rows)
+    regressions, n_compared = [], 0
+    n_skipped = cur_dupes
+    for ident, row in cur.items():
+        if ident not in base:
+            n_skipped += 1
+            continue
+        bl = base[ident]
+        label = ", ".join(f"{k}={v}" for k, v in ident) or "<row>"
+        n_compared += 1
+        for k, v in row.items():
+            if k not in bl:
+                continue
+            if _is_exact_key(k):
+                if v != bl[k]:
+                    regressions.append(
+                        f"{name}: {label}: {k} {bl[k]} -> {v} "
+                        "(simulated counters must match exactly)")
+            elif _is_wall_key(k):
+                limit = max(tolerance * float(bl[k]),
+                            float(bl[k]) + wall_slack_ms)
+                if float(v) > limit:
+                    regressions.append(
+                        f"{name}: {label}: {k} {bl[k]}ms -> {v}ms "
+                        f"(> limit {round(limit, 1)}ms)")
+    return regressions, n_compared, n_skipped
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
     ap.add_argument("--smoke", action="store_true",
                     help="smallest case per bench (CI mode)")
     ap.add_argument("--json-dir", default=".",
                     help="where BENCH_<name>.json files are written")
+    ap.add_argument("--check", action="store_true",
+                    help="perf-regression gate: compare against the "
+                         "committed BENCH_*.json baselines and exit "
+                         "non-zero on regression")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="where the committed baseline BENCH_*.json live")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="wall-clock regression factor (--check)")
+    ap.add_argument("--wall-slack-ms", type=float, default=250.0,
+                    help="absolute wall-clock slack in ms (--check)")
     args = ap.parse_args()
 
     from . import (bench_compile, bench_compression, bench_kernels,
@@ -45,13 +163,19 @@ def main() -> None:
         "serve": bench_serve, "compression": bench_compression,
     }
     if args.only:
-        modules = {k: v for k, v in modules.items()
-                   if k in args.only.split(",")}
+        wanted = args.only.split(",")
+        unknown = sorted(set(wanted) - set(modules))
+        if unknown:
+            ap.error(f"unknown bench name(s) {unknown}; "
+                     f"available: {sorted(modules)}")
+        modules = {k: v for k, v in modules.items() if k in wanted}
 
     json_dir = pathlib.Path(args.json_dir)
     json_dir.mkdir(parents=True, exist_ok=True)
+    baseline_dir = pathlib.Path(args.baseline_dir)
 
     failures = 0
+    regressions = []
     for name, mod in modules.items():
         print(f"=== {name} ===", flush=True)
         record = {"bench": name, "smoke": args.smoke, "rows": []}
@@ -72,8 +196,27 @@ def main() -> None:
             kv = ",".join(f"{k}={v}" for k, v in row.items()
                           if k not in ("bench",))
             print(f"  {kv}")
-    print(f"benchmarks done ({failures} failures)")
-    sys.exit(1 if failures else 0)
+        if args.check:
+            base_path = baseline_dir / f"BENCH_{name}.json"
+            if not base_path.exists():
+                print(f"  check: no baseline {base_path}, skipped")
+                continue
+            baseline = json.loads(base_path.read_text())
+            regs, n_cmp, n_skip = check_rows(
+                name, rows, baseline.get("rows", []),
+                args.tolerance, args.wall_slack_ms)
+            regressions += regs
+            print(f"  check: {n_cmp} rows compared, {n_skip} skipped "
+                  f"(unmatched or duplicate identity), {len(regs)} "
+                  f"regressions")
+
+    if regressions:
+        print("PERF REGRESSIONS:")
+        for r in regressions:
+            print(f"  {r}")
+    print(f"benchmarks done ({failures} failures, "
+          f"{len(regressions)} regressions)")
+    sys.exit(1 if failures or regressions else 0)
 
 
 if __name__ == "__main__":

@@ -13,12 +13,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import tempfile  # noqa: E402
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
-
 from repro.configs.base import smoke_config  # noqa: E402
-from repro.distributed import plan_mesh, make_mesh_from_plan  # noqa: E402
-from repro.distributed.elastic import ElasticPlan  # noqa: E402
+from repro.distributed import plan_mesh  # noqa: E402
 from repro.train.loop import Trainer  # noqa: E402
 
 
@@ -31,7 +27,7 @@ def main():
               f"idle={plan.n_idle}")
         trainer = Trainer(cfg, batch=8, seq_len=32, ckpt_dir=ckpt,
                           ckpt_every=5)
-        state = trainer.run(10)
+        trainer.run(10)
         loss_before = trainer.history[-1]
 
         # phase 2: 4 devices "fail" -> re-plan and resume from checkpoint
@@ -42,7 +38,7 @@ def main():
                            ckpt_every=5)
         state2 = trainer2.resume_or_init()
         print(f"resumed at step {int(state2.step)} "
-              f"(checkpointed during full-fleet phase)")
+              "(checkpointed during full-fleet phase)")
         trainer2.run(10, state=state2)
         loss_after = trainer2.history[-1]
         print(f"loss before failure: {loss_before:.4f}, "

@@ -49,9 +49,9 @@ def main():
     want = pipeline.sequential_apply([fn] * n_stages, w, xs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
-    print(f"pipelined output == sequential reference "
+    print("pipelined output == sequential reference "
           f"(makespan {sched.n_ticks} ticks vs {n_stages * n_items} "
-          f"sequential) — OK")
+          "sequential) — OK")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,13 @@
 
 from .compiler import (TenantPlacement, compile_model, place_tenants,
                        serialize_config)
-from .compute_plane import (ComputeDescriptor, ComputePlane, NumpyPlane,
-                            PallasPlane, ReferencePlane, dequantize_int8,
-                            make_descriptor, resolve_plane)
+from .compute_plane import (ComputeDescriptor, ComputePlane,
+                            DynMatmulDescriptor, NumpyPlane, PallasPlane,
+                            ReferencePlane, dequantize_int8, make_descriptor,
+                            resolve_plane)
 from .graph import (Graph, build_fig2_graph, build_lenet_like,
-                    build_resnet_block_chain, execute_reference)
+                    build_resnet_block_chain, build_tiny_transformer,
+                    execute_reference)
 from .hwspec import (ChipMesh, ChipSpec, CoreSpec, LinkSpec, make_chip,
                      make_mesh, subchip, submesh)
 from .lowering import InterChipStream
@@ -19,7 +21,8 @@ from .simulator import (DeadlockError, LinkStats, RawViolation, SimStats,
 
 __all__ = [
     "Graph", "build_fig2_graph", "build_lenet_like",
-    "build_resnet_block_chain", "execute_reference",
+    "build_resnet_block_chain", "build_tiny_transformer",
+    "execute_reference",
     "ChipMesh", "ChipSpec", "CoreSpec", "LinkSpec", "make_chip", "make_mesh",
     "subchip", "submesh",
     "InterChipStream",
@@ -28,6 +31,7 @@ __all__ = [
     "DeadlockError", "LinkStats", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
     "compile_model", "serialize_config", "TenantPlacement", "place_tenants",
-    "ComputeDescriptor", "ComputePlane", "NumpyPlane", "PallasPlane",
-    "ReferencePlane", "dequantize_int8", "make_descriptor", "resolve_plane",
+    "ComputeDescriptor", "ComputePlane", "DynMatmulDescriptor", "NumpyPlane",
+    "PallasPlane", "ReferencePlane", "dequantize_int8", "make_descriptor",
+    "resolve_plane",
 ]

@@ -14,9 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import List, Optional, Sequence, Tuple
 
 from .graph import Graph
 from .hwspec import ChipMesh, ChipSpec, make_mesh, subchip, submesh

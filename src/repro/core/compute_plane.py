@@ -112,6 +112,39 @@ def descriptor_for(cfg) -> ComputeDescriptor:
     return cfg.compute
 
 
+@dataclasses.dataclass
+class DynMatmulDescriptor:
+    """DPU descriptor for the dynamic activation×activation matmul.
+
+    Deliberately ``ComputeDescriptor``-free: there is no weight matrix to
+    program, hence no int8 conductances or per-row scales — the "matrix"
+    operand (``b_value``) is itself a streamed activation array assembled in
+    the consumer core's SRAM at run time.  The op therefore executes on the
+    digital DPU for *every* compute plane (the crossbar backends model the
+    analog array, which a dynamic operand can never occupy); planes only
+    differ in batching (:meth:`ComputePlane.dyn_mxv_batch` vs the reference
+    per-iteration loop).
+    """
+
+    a_value: str                       # pointwise-streamed operand (Ca, T, 1)
+    b_value: str                       # broadcast operand (Cb, Tb, 1)
+    transpose_b: bool                  # True: contract channel dims (QKᵀ)
+    scale: float = 1.0                 # post-matmul scalar (1/sqrt(d_head))
+
+
+def dyn_descriptor_for(cfg, node) -> DynMatmulDescriptor:
+    """Dynamic-matmul descriptor of a DPU node (lazily built for hand-made
+    configs, mirroring :func:`descriptor_for`)."""
+    desc = cfg.dyn_compute.get(node.name)
+    if desc is None:
+        desc = DynMatmulDescriptor(
+            a_value=node.inputs[0], b_value=node.inputs[1],
+            transpose_b=bool(node.attrs.get("transpose_b", False)),
+            scale=float(node.attrs.get("scale", 1.0)))
+        cfg.dyn_compute[node.name] = desc
+    return desc
+
+
 # ------------------------------------------------------------------- planes
 def mxv_rowwise(m: np.ndarray, v: np.ndarray) -> np.ndarray:
     """The simulator's default per-row crossbar MxV.
@@ -134,6 +167,22 @@ class ComputePlane:
     def mxv_batch(self, desc: ComputeDescriptor, V: np.ndarray) -> np.ndarray:
         """Stacked MxVs: rows of ``V``/result are iterations."""
         raise NotImplementedError
+
+    # ---- dynamic matmul (DPU digital path — no crossbar involvement)
+    def dyn_mxv_one(self, matrix: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """One iteration of the dynamic activation×activation matmul.
+
+        ``matrix`` is the runtime operand assembled from SRAM (see
+        :class:`DynMatmulDescriptor`) — it executes on the digital DPU, so
+        every plane shares the einsum row kernel (batch-invariant; the
+        reference plane overrides the *batch* side with the per-iteration
+        loop to stay the batching oracle).
+        """
+        return np.einsum("n,mn->m", v, matrix)
+
+    def dyn_mxv_batch(self, matrix: np.ndarray, V: np.ndarray) -> np.ndarray:
+        """Stacked dynamic matmuls: rows of ``V``/result are iterations."""
+        return np.einsum("bn,mn->bm", V, matrix)
 
 
 class NumpyPlane(ComputePlane):
@@ -162,6 +211,11 @@ class ReferencePlane(ComputePlane):
 
     def mxv_batch(self, desc, V):
         return np.stack([np.asarray(self.fn(desc.matrix, V[i]))
+                         for i in range(len(V))])
+
+    def dyn_mxv_batch(self, matrix, V):
+        # per-iteration loop: the batching oracle for the DPU matmul too
+        return np.stack([self.dyn_mxv_one(matrix, V[i])
                          for i in range(len(V))])
 
 
@@ -228,9 +282,9 @@ def resolve_plane(spec="auto", mxv_fn=None, mxv_batch_fn=None) -> ComputePlane:
         if mxv_fn is not None:
             raise ValueError(
                 f"compute_plane={type(spec).__name__} instance cannot honor "
-                f"a separate mxv_fn (the instance's own MxV wins); construct "
-                f"ReferencePlane(mxv_fn) or pass a matching mxv_batch_fn "
-                f"hook instead")
+                "a separate mxv_fn (the instance's own MxV wins); construct "
+                "ReferencePlane(mxv_fn) or pass a matching mxv_batch_fn "
+                "hook instead")
         return spec
     if spec == "auto":
         spec = "reference" if mxv_fn is not None else "numpy"
@@ -239,8 +293,8 @@ def resolve_plane(spec="auto", mxv_fn=None, mxv_batch_fn=None) -> ComputePlane:
     if mxv_fn is not None:
         raise ValueError(
             f"compute_plane={spec!r} cannot honor a custom mxv_fn; use "
-            f"compute_plane='reference' (per-iteration loop) or pass a "
-            f"matching mxv_batch_fn hook instead")
+            "compute_plane='reference' (per-iteration loop) or pass a "
+            "matching mxv_batch_fn hook instead")
     if spec == "numpy":
         return NumpyPlane()
     if spec == "pallas":

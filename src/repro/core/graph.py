@@ -13,16 +13,40 @@ Supported ops (the CNN families the paper targets):
   maxpool2d / avgpool2d — DPU windowed reduction
   global_avgpool — DPU reduction
   flatten  — layout-only
+
+Transformer extension (ISSUE 5) — sequences ride the same ``(C, H, W)``
+layout with **channels = feature dim, H = tokens, W = 1**, so a per-token
+op iterates ``(T, 1)`` exactly like a conv iterates output pixels, and a
+1x1 ``conv2d`` is a per-token linear projection (Q/K/V/O and the MLP gemms
+stay weight-stationary crossbar ops, unchanged):
+  layernorm — DPU row-wise normalization over the channel dim (per token)
+  softmax   — DPU row-wise softmax over the channel dim (per score row)
+  matmul    — *dynamic* activation×activation matmul (QKᵀ / attn·V).  Both
+              operands are streamed activations, so it cannot live on a
+              weight-stationary crossbar: it lowers to a DPU partition of
+              its own, reading operand ``a`` pointwise (one token per
+              iteration) and operand ``b`` broadcast (every iteration needs
+              the whole array).
+  transpose — DPU channel<->token swap ``(C, T, 1) -> (T, C, 1)``
+              (broadcast read, own partition — like matmul's ``b``)
+  reshape   — layout-only alias (generalized flatten)
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 CROSSBAR_OPS = ("conv2d", "gemm")
+# DPU ops that read a producer array non-pointwise (whole-array broadcast):
+# they must head their own crossbar-less partition — fused into a producer's
+# partition they would read values that iteration hasn't produced yet.
+BROADCAST_DPU_OPS = ("matmul", "transpose")
+# Layout-only ops: never executed, resolved as aliases at lowering.
+ALIAS_OPS = ("flatten", "reshape")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +163,65 @@ class Graph:
         node = Node(name, "flatten", [x], [name + ":out"], {})
         return self.add_node(node, (int(np.prod(self.values[x].shape)),))
 
+    def reshape(self, name: str, x: str, shape: Sequence[int]) -> str:
+        """Layout-only alias (generalized flatten): same element count,
+        consumed through full reads (like flatten feeding a gemm)."""
+        shape = tuple(int(s) for s in shape)
+        assert int(np.prod(self.values[x].shape)) == int(np.prod(shape)), \
+            f"{name}: reshape {self.values[x].shape} -> {shape} size mismatch"
+        node = Node(name, "reshape", [x], [name + ":out"], dict(shape=shape))
+        return self.add_node(node, shape)
+
+    # ------------------------------------------------- transformer operators
+    def layernorm(self, name: str, x: str, gamma: str, beta: str,
+                  eps: float = 1e-5) -> str:
+        """Row-wise layer norm over the channel (feature) dim, per token."""
+        shape = self.values[x].shape
+        c = shape[0]
+        assert self.values[gamma].shape == (c,), f"{name}: gamma shape"
+        assert self.values[beta].shape == (c,), f"{name}: beta shape"
+        node = Node(name, "layernorm", [x, gamma, beta], [name + ":out"],
+                    dict(eps=float(eps)))
+        return self.add_node(node, shape)
+
+    def softmax(self, name: str, x: str) -> str:
+        """Row-wise softmax over the channel dim (the key dim of a score
+        row in the ``(keys, queries, 1)`` score layout)."""
+        node = Node(name, "softmax", [x], [name + ":out"], {})
+        return self.add_node(node, self.values[x].shape)
+
+    def matmul(self, name: str, a: str, b: str, transpose_b: bool = False,
+               scale: float = 1.0) -> str:
+        """Dynamic activation×activation matmul (no weight operand).
+
+        Sequence tensors are ``(C, T, 1)`` (channels x tokens).  Per output
+        token ``t``: ``out[:, t] = B_mat @ a[:, t]`` where
+        ``transpose_b=True`` takes ``B_mat = b.T`` of shape ``(Tb, Cb)``
+        (QKᵀ: contract the shared feature dim, ``Cb == Ca``) and
+        ``transpose_b=False`` takes ``B_mat = b`` of shape ``(Cb, Tb)``
+        (attn·V: contract b's token dim, ``Tb == Ca``).  ``scale`` is the
+        post-matmul scalar (1/sqrt(d_head) for attention scores).
+        """
+        ca, ha, wa = self.values[a].shape
+        cb, hb, wb = self.values[b].shape
+        assert wa == 1 and wb == 1, f"{name}: matmul needs W=1 sequences"
+        if transpose_b:
+            assert ca == cb, f"{name}: contract dim {ca} vs {cb}"
+            out_shape = (hb, ha, 1)
+        else:
+            assert hb == ca, f"{name}: contract dim {hb} vs {ca}"
+            out_shape = (cb, ha, 1)
+        node = Node(name, "matmul", [a, b], [name + ":out"],
+                    dict(transpose_b=bool(transpose_b), scale=float(scale)))
+        return self.add_node(node, out_shape)
+
+    def transpose(self, name: str, x: str) -> str:
+        """Channel<->token swap: ``(C, T, 1) -> (T, C, 1)``."""
+        c, h, w = self.values[x].shape
+        assert w == 1, f"{name}: transpose needs W=1 sequences"
+        node = Node(name, "transpose", [x], [name + ":out"], {})
+        return self.add_node(node, (h, c, 1))
+
     # ----------------------------------------------------------------- query
     def producer_of(self, value: str) -> Optional[Node]:
         for n in self.nodes:
@@ -212,6 +295,36 @@ def _exec_node(graph: Graph, node: Node, env: Dict[str, np.ndarray], mxv_fn):
         return env[node.inputs[0]].mean(axis=(1, 2))
     if op == "flatten":
         return env[node.inputs[0]].reshape(-1)
+    if op == "reshape":
+        return env[node.inputs[0]].reshape(node.attrs["shape"])
+    if op == "layernorm":
+        x = env[node.inputs[0]]
+        g = graph.weights[node.inputs[1]]
+        b = graph.weights[node.inputs[2]]
+        eps = np.float32(node.attrs["eps"])
+        mu = x.mean(axis=0, keepdims=True)
+        xc = x - mu
+        var = (xc * xc).mean(axis=0, keepdims=True)
+        bshape = (-1,) + (1,) * (x.ndim - 1)
+        return xc / np.sqrt(var + eps) * g.reshape(bshape) + b.reshape(bshape)
+    if op == "softmax":
+        x = env[node.inputs[0]]
+        e = np.exp(x - x.max(axis=0, keepdims=True))
+        return e / e.sum(axis=0, keepdims=True)
+    if op == "matmul":
+        a = env[node.inputs[0]]
+        b = env[node.inputs[1]]
+        a2 = a.reshape(a.shape[0], -1)           # (Ca, Ta)
+        b2 = b.reshape(b.shape[0], -1)           # (Cb, Tb)
+        dmat = np.ascontiguousarray(b2.T if node.attrs["transpose_b"] else b2,
+                                    np.float32)
+        y = dmat @ a2                            # (M, Ta)
+        scale = node.attrs["scale"]
+        if scale != 1.0:
+            y = y * np.float32(scale)
+        return y.astype(np.float32)[:, :, None]
+    if op == "transpose":
+        return np.ascontiguousarray(env[node.inputs[0]].transpose(1, 0, 2))
     raise NotImplementedError(op)
 
 
@@ -274,6 +387,61 @@ def build_lenet_like(in_ch: int = 1, img: int = 12, n_classes: int = 10,
     h2 = g.maxpool2d("pool2", h2)
     hf = g.flatten("flat", h2)
     out = g.gemm("fc", hf, wf)
+    g.mark_output(out)
+    g.validate()
+    return g
+
+
+def build_tiny_transformer(seq: int = 4, d_model: int = 8, d_head: int = 8,
+                           d_ff: int = 16, n_classes: int = 4, seed: int = 0,
+                           explicit_transpose: bool = False) -> Graph:
+    """A single-head transformer encoder block + classifier head.
+
+    Sequence layout: ``(d_model, seq, 1)`` — channels are the feature dim,
+    H is the token dim (see the module docstring).  Q/K/V/O projections and
+    both MLP gemms are 1x1 ``conv2d`` nodes (weight-stationary crossbar MxV,
+    one token per iteration); layernorm/softmax are fused DPU ops; QKᵀ and
+    attn·V are dynamic ``matmul`` nodes (DPU partitions of their own).
+    ``explicit_transpose=True`` computes QKᵀ as ``matmul(q, transpose(k))``
+    instead of ``matmul(q, k, transpose_b=True)`` — same math, exercising
+    the transpose op end-to-end.
+    """
+    rng = np.random.default_rng(seed)
+    g = Graph()
+
+    def proj(name: str, x: str, d_out: int, d_in: int) -> str:
+        w = g.add_weight(f"{name}_w", rng.normal(size=(d_out, d_in, 1, 1),
+                                                 scale=1.0 / math.sqrt(d_in)))
+        return g.conv2d(name, x, w)
+
+    x = g.add_input("x", (d_model, seq, 1))
+    g.add_weight("ln1_g", np.ones(d_model))
+    g.add_weight("ln1_b", np.zeros(d_model))
+    ln1 = g.layernorm("ln1", x, "ln1_g", "ln1_b")
+    q = proj("q_proj", ln1, d_head, d_model)
+    k = proj("k_proj", ln1, d_head, d_model)
+    v = proj("v_proj", ln1, d_head, d_model)
+    inv_sqrt_d = 1.0 / math.sqrt(d_head)
+    if explicit_transpose:
+        kt = g.transpose("k_t", k)
+        s = g.matmul("qk", q, kt, transpose_b=False, scale=inv_sqrt_d)
+    else:
+        s = g.matmul("qk", q, k, transpose_b=True, scale=inv_sqrt_d)
+    p = g.softmax("attn_sm", s)
+    a = g.matmul("attn_v", p, v)
+    o = proj("o_proj", a, d_model, d_head)
+    r1 = g.add("res1", x, o)
+    g.add_weight("ln2_g", np.ones(d_model))
+    g.add_weight("ln2_b", np.zeros(d_model))
+    ln2 = g.layernorm("ln2", r1, "ln2_g", "ln2_b")
+    m1 = proj("mlp1", ln2, d_ff, d_model)
+    h = g.relu("mlp_relu", m1)
+    m2 = proj("mlp2", h, d_model, d_ff)
+    r2 = g.add("res2", r1, m2)
+    flat = g.reshape("head_flat", r2, (d_model * seq,))
+    wc = g.add_weight("cls_w", rng.normal(size=(n_classes, d_model * seq),
+                                          scale=0.2))
+    out = g.gemm("cls", flat, wc)
     g.mark_output(out)
     g.validate()
     return g

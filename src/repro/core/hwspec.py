@@ -8,8 +8,7 @@ expose the interconnect topology to the compiler").
 from __future__ import annotations
 
 import dataclasses
-from typing import FrozenSet, Iterable, Tuple
-
+from typing import FrozenSet, Tuple
 Edge = Tuple[int, int]
 
 

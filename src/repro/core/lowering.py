@@ -21,10 +21,11 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import poly
-from .compute_plane import ComputeDescriptor, make_descriptor
+from .compute_plane import (ComputeDescriptor, DynMatmulDescriptor,
+                            make_descriptor)
 from .hwspec import ChipMesh, LinkSpec
 from .poly import isl  # islpy when installed, the finite fisl backend otherwise
-from .graph import CROSSBAR_OPS, Graph, Node
+from .graph import ALIAS_OPS, CROSSBAR_OPS, Graph, Node
 from .partition import GCU_PARTITION, PartitionedGraph
 
 Point = Tuple[int, ...]
@@ -120,6 +121,20 @@ def pool_read_relation(iter_name: str, out_hw: Tuple[int, int],
         f"{stride}*ow <= j < {stride}*ow+{k} and 0<=i<{ih} and 0<=j<{iw} }}")
 
 
+def broadcast_read_relation(iter_name: str, out_hw: Tuple[int, int],
+                            in_shape: Tuple[int, int, int]) -> isl.Map:
+    """Every iteration reads the *whole* array (dynamic matmul's streamed
+    ``b`` operand, transpose): the Appendix-A ``S`` collapses to the
+    all-or-nothing gate — no reader iteration is safe before the producer's
+    last write, every one is after it.
+    """
+    c, ih, iw = in_shape
+    oh, ow = out_hw
+    return isl.Map(
+        f"{{ {iter_name}[oh,ow] -> A[c,i,j] : 0<=oh<{oh} and 0<=ow<{ow} and "
+        f"0<=c<{c} and 0<=i<{ih} and 0<=j<{iw} }}")
+
+
 # ---------------------------------------------------------------- core config
 @dataclasses.dataclass
 class LcuArrayConfig:
@@ -163,6 +178,11 @@ class CoreConfig:
     # Compute-plane descriptor (weight matrix + int8 quantization), built at
     # lowering so simulator backends never re-derive per-core state.
     compute: Optional[ComputeDescriptor] = None
+    # Dynamic-matmul descriptors per DPU matmul node (ComputeDescriptor-free:
+    # both operands are streamed activations, so there is nothing to program
+    # into a crossbar — the op runs on the digital DPU).
+    dyn_compute: Dict[str, DynMatmulDescriptor] = dataclasses.field(
+        default_factory=dict)
 
     def dpu_listing(self) -> List[str]:
         """Human-readable DPU 'instruction sequence' for the config dump."""
@@ -256,7 +276,7 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
     graph = pg.graph
     aliases: Dict[str, str] = {}
     for node in graph.nodes:
-        if node.op == "flatten":
+        if node.op in ALIAS_OPS:
             aliases[node.outputs[0]] = node.inputs[0]
 
     # ---- write specs: how each cross-partition value gets finalized
@@ -266,10 +286,11 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
     for node in graph.nodes:
         out = node.outputs[0]
         shape = graph.values[out].shape
-        if node.op in ("conv2d", "relu", "add"):
+        if node.op in ("conv2d", "relu", "add", "layernorm", "softmax",
+                       "matmul", "transpose"):
             if len(shape) == 3:
                 write_specs[out] = WriteSpec(out, "pixel", shape)
-            else:  # relu/add over 1-D (post-gemm) tensors
+            else:  # relu/add/layernorm/softmax over 1-D (post-gemm) tensors
                 write_specs[out] = WriteSpec(out, "full", shape)
         elif node.op in ("maxpool2d", "avgpool2d"):
             write_specs[out] = WriteSpec(out, "pool", shape,
@@ -282,7 +303,7 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
                                               last_ow=src_shape[2] - 1))
         elif node.op == "gemm":
             write_specs[out] = WriteSpec(out, "full", shape)
-        elif node.op == "flatten":
+        elif node.op in ALIAS_OPS:
             pass
         else:
             raise LoweringError(f"no write spec for op {node.op}")
@@ -330,14 +351,24 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
         cross_in = {_resolve_alias(graph, v, aliases): src
                     for v, src in pg.cross_edges_into(part.idx).items()}
         for node in part.nodes:
-            if node.op == "flatten":
+            if node.op in ALIAS_OPS:
                 continue
-            for raw_in in node.inputs:
+            for pos, raw_in in enumerate(node.inputs):
                 if raw_in in graph.weights:
                     continue
                 v = _resolve_alias(graph, raw_in, aliases)
                 if v not in cross_in:
-                    continue  # intra-partition value
+                    # intra-partition value — except for the broadcast-read
+                    # operands, which by the partitioning contract can never
+                    # be produced in this partition (matmul/transpose head
+                    # their own partition precisely so both operands stream
+                    # in through the LCU)
+                    if node.op == "transpose" or (
+                            node.op == "matmul" and pos == 1):
+                        raise LoweringError(
+                            f"{node.name}: broadcast operand {v!r} must be "
+                            "cross-partition")
+                    continue
                 in_shape = graph.values[v].shape
                 if node.op == "conv2d":
                     rel = conv_read_relation(
@@ -345,11 +376,20 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
                         conv_attrs["fw"], conv_attrs["stride"],
                         conv_attrs["pad"])
                     in_pads[v] = max(in_pads.get(v, 0), conv_attrs["pad"])
-                elif node.op in ("relu", "add"):
+                elif node.op in ("relu", "add", "layernorm", "softmax"):
                     if len(in_shape) == 3:
                         rel = pointwise_read_relation(iname, bounds, in_shape)
                     else:
                         rel = full_read_relation(iname, in_shape)
+                elif node.op == "matmul":
+                    # operand a (pos 0) streams one token per iteration;
+                    # operand b (pos 1) is the runtime matrix — broadcast
+                    if pos == 0:
+                        rel = pointwise_read_relation(iname, bounds, in_shape)
+                    else:
+                        rel = broadcast_read_relation(iname, bounds, in_shape)
+                elif node.op == "transpose":
+                    rel = broadcast_read_relation(iname, bounds, in_shape)
                 elif node.op in ("maxpool2d", "avgpool2d"):
                     rel = pool_read_relation(iname, tuple(
                         graph.values[node.outputs[0]].shape[1:]), in_shape,
@@ -393,14 +433,22 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
                 sends.append(SendSpec(v, write_specs[v], dsts, to_gmem))
 
         dpu_nodes = [n for n in part.nodes
-                     if n.op not in CROSSBAR_OPS and n.op != "flatten"]
+                     if n.op not in CROSSBAR_OPS and n.op not in ALIAS_OPS]
         compute = (make_descriptor(xbar_matrix, xbar.op)
                    if xbar is not None else None)
+        dyn_compute = {
+            n.name: DynMatmulDescriptor(
+                a_value=_resolve_alias(graph, n.inputs[0], aliases),
+                b_value=_resolve_alias(graph, n.inputs[1], aliases),
+                transpose_b=bool(n.attrs["transpose_b"]),
+                scale=float(n.attrs["scale"]))
+            for n in dpu_nodes if n.op == "matmul"}
         cores[core_id] = CoreConfig(
             core_id=core_id, partition_idx=part.idx, iter_bounds=bounds,
             xbar_node=xbar, xbar_matrix=xbar_matrix, xbar_bias=xbar_bias,
             dpu_nodes=dpu_nodes, lcu=lcu, sends=sends,
-            conv_attrs=conv_attrs, xbar_input=xbar_input, compute=compute)
+            conv_attrs=conv_attrs, xbar_input=xbar_input, compute=compute,
+            dyn_compute=dyn_compute)
 
     # ---- GCU config
     if len(graph.inputs) != 1:

@@ -17,8 +17,6 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-import numpy as np
-
 try:
     import z3
     HAVE_Z3 = True
@@ -26,7 +24,6 @@ except ModuleNotFoundError:  # gate the dep: complete backtracking search
     z3 = None
     HAVE_Z3 = False
 
-from .graph import Graph
 from .hwspec import ChipMesh, ChipSpec
 from .partition import GCU_PARTITION, PartitionedGraph, partition_chips
 
@@ -68,7 +65,7 @@ def check_resources(pg: PartitionedGraph, chip: ChipSpec) -> None:
                 raise MappingError(
                     f"partition {p.idx}: crossbar op {p.crossbar.name} needs "
                     f"{rows}x{cols} > width {chip.core.width} "
-                    f"(paper §3.5: requires graph transformation)")
+                    "(paper §3.5: requires graph transformation)")
         need = sram_footprint(pg, p.idx)
         if need > chip.core.sram_bytes:
             raise MappingError(

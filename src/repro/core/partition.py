@@ -9,14 +9,20 @@ partition whenever a crossbar node is encountered; every other node is bundled
 with the *latest* partition among its producers, which reproduces the paper's
 Fig. 2 resolution (the ADD joins the right-hand-side partition — joining the
 left would create a cycle).
+
+Broadcast DPU ops (dynamic ``matmul``, ``transpose`` — ISSUE 5) are the one
+exception to the bundling rule: they read a producer array *non-pointwise*
+(iteration ``t`` needs locations the producer's iteration ``t`` has not
+written yet), so fusing them into a producer's partition would deadlock the
+per-iteration pipeline.  They head a crossbar-less partition of their own and
+receive their operands through the LCU like any cross-partition edge.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
-
-from .graph import CROSSBAR_OPS, Graph, Node
+from typing import Dict, List, Optional, Tuple
+from .graph import BROADCAST_DPU_OPS, CROSSBAR_OPS, Graph, Node
 from .hwspec import ChipMesh
 
 GCU_PARTITION = -1  # virtual partition for graph inputs (fed by the GCU)
@@ -65,6 +71,10 @@ def partition_graph(graph: Graph) -> PartitionedGraph:
     for node in graph.nodes:
         if node.op in CROSSBAR_OPS:
             part = Partition(idx=len(partitions), crossbar=node)
+            partitions.append(part)
+        elif node.op in BROADCAST_DPU_OPS:
+            # non-pointwise consumer: must not fuse with any producer
+            part = Partition(idx=len(partitions))
             partitions.append(part)
         else:
             producers = [value_part[i] for i in node.inputs if i in value_part
@@ -220,7 +230,7 @@ def partition_chips(pg: PartitionedGraph, mesh: ChipMesh) -> Dict[int, int]:
     if assign is None:
         raise PartitionError(
             f"no contiguous split of {n_parts} partitions over {n_chips} "
-            f"chips satisfies the link topology "
+            "chips satisfies the link topology "
             f"(mesh links: {sorted(mesh.links)})")
     return assign
 

@@ -28,8 +28,7 @@ compiler, driving multi-pod pipeline parallelism.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 import numpy as np
 

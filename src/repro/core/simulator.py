@@ -76,6 +76,16 @@ The simulator doubles as the correctness oracle harness: with
 ``check_raw=True`` every executed iteration asserts that all SRAM locations it
 reads were previously written (an LCU bug would trip this immediately).
 
+**Transformer DPU ops (ISSUE 5).**  ``layernorm``/``softmax`` execute like
+relu/add (row-wise over the channel vector, batched in the event engine with
+row-independent reductions — bit-identical to the per-iteration reference).
+The dynamic ``matmul`` (QKᵀ / attn·V) assembles its matrix operand from the
+consumer core's SRAM (``DynMatmulDescriptor``; the broadcast frontier
+guarantees the array is complete before any iteration is admitted) and
+dispatches through ``ComputePlane.dyn_mxv_one/batch`` — a digital DPU path
+on every plane.  All operands are made C-contiguous before the plane call:
+einsum is not bit-stable across input strides.
+
 **Request-level serving (ISSUE 4).**  ``run`` accepts per-image ``arrivals``
 (the GCU may not start streaming an image before its arrival cycle), an
 admission bound ``max_inflight`` (started-but-incomplete images), and
@@ -102,7 +112,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .compute_plane import descriptor_for, resolve_plane
+from .compute_plane import descriptor_for, dyn_descriptor_for, resolve_plane
 from .lowering import AcceleratorProgram, CoreConfig, SendSpec
 from .hwspec import ChipMesh, ChipSpec
 from . import poly
@@ -261,7 +271,7 @@ class _RequestPlan:
             raise ValueError("arrival cycles must be >= 0")
         self.tenants = as_list(tenants, "tenants", 0)
         if any(not 0 <= t < len(sim.progs) for t in self.tenants):
-            raise ValueError(f"tenant index outside the "
+            raise ValueError("tenant index outside the "
                              f"{len(sim.progs)}-program list")
         self.priorities = None if priorities is None \
             else as_list(priorities, "priorities", 0)
@@ -323,7 +333,7 @@ class Simulator:
             if overlap:
                 raise ValueError(
                     f"tenant {tk} shares cores {sorted(overlap)} with an "
-                    f"earlier tenant — co-residency requires disjoint sets")
+                    "earlier tenant — co-residency requires disjoint sets")
             for cid, cfg in p.cores.items():
                 self.cores_merged[cid] = cfg
                 self.tenant_of_core[cid] = tk
@@ -346,6 +356,12 @@ class Simulator:
     def _values_for(self, cfg: CoreConfig):
         """The owning tenant's value-shape table for a core config."""
         return self.progs[self.tenant_of_core[cfg.core_id]].pgraph.graph.values
+
+    def _weights_for(self, cfg: CoreConfig):
+        """The owning tenant's weight table (layernorm gamma/beta live in
+        GMEM-resident graph weights, not the crossbar)."""
+        return self.progs[
+            self.tenant_of_core[cfg.core_id]].pgraph.graph.weights
 
     def _link_for(self, src_core: int, dst_core: int):
         """(extra_delay_fn, link_key) for a core->core message, or (None,
@@ -626,7 +642,8 @@ class Simulator:
                 and cfg.xbar_input == v:
             need |= {(i, j) for i in range(H) for j in range(W)}
         for n in cfg.dpu_nodes:
-            if v in n.inputs and n.op in ("relu", "add"):
+            if v in n.inputs and n.op in ("relu", "add", "layernorm",
+                                          "softmax"):
                 need.add((it[0], it[1]))
             elif v in n.inputs and n.op in ("maxpool2d", "avgpool2d"):
                 k, s = n.attrs["k"], n.attrs["stride"]
@@ -635,6 +652,13 @@ class Simulator:
                          for j in range(ow * s, ow * s + k)
                          if 0 <= i < H and 0 <= j < W}
             elif v in n.inputs and n.op == "global_avgpool":
+                need |= {(i, j) for i in range(H) for j in range(W)}
+            elif v in n.inputs and n.op == "matmul":
+                if v == n.inputs[0]:          # streamed operand: this token
+                    need.add((it[0], it[1]))
+                if v == n.inputs[1]:          # runtime matrix: everything
+                    need |= {(i, j) for i in range(H) for j in range(W)}
+            elif v in n.inputs and n.op == "transpose":
                 need |= {(i, j) for i in range(H) for j in range(W)}
         return need
 
@@ -666,7 +690,12 @@ class Simulator:
                 fh, fw = cfg.conv_attrs["fh"], cfg.conv_attrs["fw"]
                 oh, ow = it
                 win = buf[:, oh * s:oh * s + fh, ow * s:ow * s + fw]
-                y = self.plane.mxv_one(desc, win.reshape(-1))
+                # ascontiguousarray: for 1x1 windows (per-token projections)
+                # reshape(-1) stays a strided *view*, and einsum is not
+                # bit-stable across input strides — the event engine's
+                # gathered rows are contiguous
+                y = self.plane.mxv_one(
+                    desc, np.ascontiguousarray(win.reshape(-1)))
             else:  # gemm
                 vbuf = st.sram[cfg.xbar_input]
                 y = self.plane.mxv_one(desc, vbuf.reshape(-1))
@@ -714,6 +743,37 @@ class Simulator:
                     reduce_ready[out] = st.reduce_acc[out] / (
                         src_shape[1] * src_shape[2])
                     env[out] = reduce_ready[out]
+            elif n.op == "layernorm":
+                x = pix(n.inputs[0])
+                w = self._weights_for(cfg)
+                eps = np.float32(n.attrs["eps"])
+                mu = x.mean()
+                xc = x - mu
+                var = (xc * xc).mean()
+                env[n.outputs[0]] = (xc / np.sqrt(var + eps)
+                                     * w[n.inputs[1]] + w[n.inputs[2]]
+                                     ).astype(np.float32)
+            elif n.op == "softmax":
+                x = pix(n.inputs[0])
+                e = np.exp(x - x.max())
+                env[n.outputs[0]] = (e / e.sum()).astype(np.float32)
+            elif n.op == "matmul":
+                d = dyn_descriptor_for(cfg, n)
+                # contiguous copy: einsum is not bit-stable across input
+                # strides, and the event engine's batched rows are contiguous
+                a = np.ascontiguousarray(pix(d.a_value), np.float32)
+                bbuf = st.sram[d.b_value]
+                dmat = bbuf.reshape(bbuf.shape[0], -1)
+                if d.transpose_b:
+                    dmat = dmat.T
+                dmat = np.ascontiguousarray(dmat, np.float32)
+                y = np.asarray(self.plane.dyn_mxv_one(dmat, a))
+                if d.scale != 1.0:
+                    y = y * np.float32(d.scale)
+                env[n.outputs[0]] = y.astype(np.float32)
+            elif n.op == "transpose":
+                buf = st.sram[n.inputs[0]]
+                env[n.outputs[0]] = buf[it[0], :, 0].copy()
             else:
                 raise NotImplementedError(f"DPU op {n.op}")
 
@@ -1472,6 +1532,36 @@ class _EventEngine:
                     val = racc / (src_shape[1] * src_shape[2])
                     reduce_rows[out] = (k - 1, val)
                     env[out] = val[None]
+            elif n.op == "layernorm":
+                x = pix(n.inputs[0])
+                w = self.sim._weights_for(cfg)
+                eps = np.float32(n.attrs["eps"])
+                mu = x.mean(axis=1, keepdims=True)
+                xc = x - mu
+                var = (xc * xc).mean(axis=1, keepdims=True)
+                env[n.outputs[0]] = (xc / np.sqrt(var + eps)
+                                     * w[n.inputs[1]] + w[n.inputs[2]]
+                                     ).astype(np.float32, copy=False)
+            elif n.op == "softmax":
+                x = pix(n.inputs[0])
+                e = np.exp(x - x.max(axis=1, keepdims=True))
+                env[n.outputs[0]] = (e / e.sum(axis=1, keepdims=True)
+                                     ).astype(np.float32, copy=False)
+            elif n.op == "matmul":
+                d = dyn_descriptor_for(cfg, n)
+                V = pix(d.a_value)                        # (k, Ca)
+                bbuf = st.sram[d.b_value]
+                dmat = bbuf.reshape(bbuf.shape[0], -1)
+                if d.transpose_b:
+                    dmat = dmat.T
+                dmat = np.ascontiguousarray(dmat, np.float32)
+                Y = np.asarray(sim.plane.dyn_mxv_batch(dmat, V))
+                if d.scale != 1.0:
+                    Y = Y * np.float32(d.scale)
+                env[n.outputs[0]] = Y.astype(np.float32, copy=False)
+            elif n.op == "transpose":
+                buf = st.sram[n.inputs[0]]
+                env[n.outputs[0]] = buf[pts0, :, 0]
             else:
                 raise NotImplementedError(f"DPU op {n.op}")
 
@@ -1553,12 +1643,19 @@ class _EventEngine:
             for n in cfg.dpu_nodes:
                 if v not in n.inputs:
                     continue
-                if n.op in ("relu", "add"):
+                if n.op in ("relu", "add", "layernorm", "softmax"):
                     lst.append(("point",))
                 elif n.op in ("maxpool2d", "avgpool2d"):
                     lst.append(("window", n.attrs["stride"], 0,
                                 n.attrs["k"], n.attrs["k"]))
                 elif n.op == "global_avgpool":
+                    lst.append(("full",))
+                elif n.op == "matmul":
+                    if v == n.inputs[0]:
+                        lst.append(("point",))
+                    if v == n.inputs[1]:
+                        lst.append(("full",))
+                elif n.op == "transpose":
                     lst.append(("full",))
             ops[v] = lst
         return ops

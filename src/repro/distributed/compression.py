@@ -177,7 +177,7 @@ def hierarchical_psum_sharded(mesh, x: jax.Array, *, fast_axis: str = "data",
     if x.shape[0] != n:
         raise ValueError(
             f"x leading dim {x.shape[0]} != {axes} device count {n}: each "
-            f"device contributes exactly one slice")
+            "device contributes exactly one slice")
 
     def body(xl):
         return hierarchical_psum(xl[0], fast_axis=fast_axis,

@@ -22,7 +22,6 @@ accumulated gradients is where int8 compression applies).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -110,7 +109,7 @@ def ring_all_reduce_sharded(mesh, x: jax.Array, axis: str, *,
     if x.shape[0] != n:
         raise ValueError(
             f"x leading dim {x.shape[0]} != axis {axis!r} size {n}: each "
-            f"device contributes exactly one slice")
+            "device contributes exactly one slice")
 
     def body(xl):
         return ring_all_reduce(xl[0], axis, n_chunks=n_chunks)[None]

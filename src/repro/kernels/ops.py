@@ -8,7 +8,6 @@ kernel path is the TPU hot-spot implementation validated against it.
 
 from __future__ import annotations
 
-import jax
 
 from . import ref
 from .conv2d import crossbar_conv2d

@@ -11,10 +11,9 @@ tables in place.
 
 from __future__ import annotations
 
-import json
 import re
 
-from repro.launch.report import ARCH_ORDER, SHAPE_ORDER, fmt_s, load
+from repro.launch.report import fmt_s, load
 
 LEVERS = {
     ("collective", "train"):
@@ -121,7 +120,7 @@ def main() -> None:
     md = inject(md, "TABLE-PLACEHOLDER-ROOFLINE", roofline_table(recs))
     md = inject(md, "TABLE-PLACEHOLDER-LEVERS", levers_table(recs))
     note = (f"\n*{len(recs)}/{n_expected} scaled cells present at "
-            f"generation time.*\n")
+            "generation time.*\n")
     if f"{len(recs)}/{n_expected} scaled cells" not in md:
         md = re.sub(r"\n\*\d+/\d+ scaled cells present at generation "
                     r"time\.\*\n", "\n", md)

@@ -26,7 +26,7 @@ import jax               # noqa: E402
 from repro.configs.base import SHAPES, get_arch  # noqa: E402
 from repro.configs import archs  # noqa: E402,F401
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.launch.roofline import (_DTYPE_BYTES, _SHAPE_RE,  # noqa: E402
+from repro.launch.roofline import (_DTYPE_BYTES,  # noqa: E402
                                    analytic_bytes, cost_dict,
                                    parse_collectives, roofline_terms)
 from repro.launch.specs import make_cell, model_flops  # noqa: E402

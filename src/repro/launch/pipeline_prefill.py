@@ -33,12 +33,10 @@ import argparse          # noqa: E402
 import dataclasses      # noqa: E402
 import json              # noqa: E402
 import time              # noqa: E402
-from functools import partial  # noqa: E402
-from typing import Any, Dict, Tuple  # noqa: E402
+from typing import Any, Dict  # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np       # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import sharding as sh  # noqa: E402
@@ -136,7 +134,6 @@ def make_pipelined_prefill(cfg: ArchConfig, mesh: Mesh, n_micro: int,
         return outs.astype(jnp.dtype(cfg.compute_dtype))
 
     stage_sds = init_stage_params_sds(cfg, n_stages)
-    head_sds = head_params_sds(cfg)
     tokens_sds = jax.ShapeDtypeStruct((n_micro, b_m, seq_len), jnp.int32)
 
     # shardings: stage axis -> pod; interior -> the standard model rules

@@ -14,8 +14,7 @@ collective-permute).  All terms are normalized to global quantities so the
 from __future__ import annotations
 
 import re
-from typing import Dict, Tuple
-
+from typing import Dict
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link

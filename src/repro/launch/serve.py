@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 from repro.configs import archs  # noqa: F401
 from repro.configs.base import get_arch, smoke_config

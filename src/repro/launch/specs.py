@@ -7,7 +7,6 @@ the dry-run (the shannon/kernels pattern).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax

@@ -9,15 +9,13 @@ PartitionSpecs (see :mod:`repro.sharding`).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, MoESpec, SSMSpec
-
+from repro.configs.base import ArchConfig, SSMSpec
 Params = Dict[str, Any]
 
 
@@ -779,7 +777,6 @@ def mamba_decode(cfg: ArchConfig, p: Params, x, conv_state, ssm_state):
     """One-token decode.  x (B, 1, d); conv_state (B, K-1, Din);
     ssm_state (B, Din, N)."""
     s: SSMSpec = cfg.ssm or SSMSpec()
-    b = x.shape[0]
     dtr = p["dt_w"].shape[0]
 
     xz = x[:, 0] @ p["in_proj"]

@@ -13,12 +13,9 @@ stacked over periods.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
-
+from typing import Any, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from . import layers as L

@@ -24,12 +24,10 @@ per-request latencies, across both simulator engines and repeated runs
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
-
+from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.compiler import TenantPlacement
-from repro.core.hwspec import ChipMesh, ChipSpec
 from repro.core.lowering import AcceleratorProgram
 from repro.core.simulator import SimStats, Simulator
 from repro.serve.scheduler import Request

@@ -9,8 +9,7 @@ lengths allow ragged batches; finished sequences are masked out.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
-
+from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np

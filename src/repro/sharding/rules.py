@@ -14,8 +14,7 @@ multi-pod.  Conventions (see DESIGN.md §8):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
-
+from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -40,8 +40,6 @@ def make_train_step(model: Model, *, peak_lr: float = 3e-4,
                     total_steps: int = 10_000,
                     weight_decay: float = 0.1) -> Callable:
     """(state, batch) -> (state, metrics); jit-able / pjit-shardable."""
-    cfg = model.cfg
-
     def train_step(state: TrainState, batch) -> tuple[TrainState, Dict]:
         def loss_fn(p):
             loss, metrics = model.loss(p, batch)
@@ -111,7 +109,6 @@ class Trainer:
                                 delay_fn=self.delay_fn)
         times: list = []
         try:
-            start = int(state.step)
             for _ in range(n_steps):
                 gstep = int(state.step)
                 if die_at is not None and gstep == die_at:

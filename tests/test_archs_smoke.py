@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import archs
-from repro.configs.base import get_arch, smoke_config, shapes_for, SHAPES
+from repro.configs.base import get_arch, smoke_config, shapes_for
 from repro.models import build_model
 from repro.optim import adamw_init
 from repro.train import TrainState, make_train_step

@@ -18,7 +18,7 @@ import pytest
 from repro.core import (Simulator, build_fig2_graph, build_lenet_like,
                         build_resnet_block_chain, compile_model,
                         dequantize_int8, make_chip)
-from repro.core.compute_plane import (NumpyPlane, PallasPlane, ReferencePlane,
+from repro.core.compute_plane import (NumpyPlane, PallasPlane,
                                       make_descriptor, quantize_matrix,
                                       resolve_plane)
 

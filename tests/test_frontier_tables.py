@@ -12,7 +12,6 @@ from __future__ import annotations
 
 from typing import Dict, List, Set, Tuple
 
-import numpy as np
 import pytest
 
 from repro.core import poly

@@ -3,7 +3,6 @@ plus dispatch-invariant property tests."""
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -2,13 +2,12 @@
 
 from __future__ import annotations
 
-import numpy as np
 import pytest
 
 from repro.core import (MappingError, build_fig2_graph, build_lenet_like,
                         build_resnet_block_chain, make_chip, map_partitions,
                         partition_graph)
-from repro.core.graph import CROSSBAR_OPS, Graph
+from repro.core.graph import CROSSBAR_OPS
 from repro.core.partition import GCU_PARTITION
 
 
@@ -77,7 +76,7 @@ def test_mapping_respects_topology():
 def test_mapping_unsat_on_chain():
     """Residual skip edges cannot map onto a pure chain topology."""
     g = build_fig2_graph()
-    pg = partition_graph(g)
+    partition_graph(g)
     # partitions 0->1 via both conv1:out (skip) and conv2 path: the chain
     # works for 2 partitions, so make it harder: 3 blocks on a 6-core chain
     g3 = build_resnet_block_chain(n_blocks=3)

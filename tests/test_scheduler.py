@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-import jax
 
 from repro.configs.base import smoke_config
 from repro.serve.scheduler import ContinuousBatcher, Request

@@ -77,9 +77,7 @@ def test_checkpoint_atomicity(tmp_path):
 
 def test_straggler_watchdog():
     """A single slow step gets flagged by the step-time watchdog."""
-    import time
 
-    cfg = smoke_config("llama3.2-3b")
     delays = {15: 0.5}
 
     tr = _trainer(None, watchdog_factor=3.0,

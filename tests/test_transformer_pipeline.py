@@ -1,0 +1,322 @@
+"""Transformer encoder blocks on the CM pipeline (ISSUE 5).
+
+Covers the three contracts the op-coverage expansion must hold:
+
+  * functional — ``build_tiny_transformer`` outputs match the numpy graph
+    oracle across engine × compute-plane (and with the explicit-transpose
+    attention variant, and scaled out to ``chips=2``, and co-resident with a
+    CNN tenant);
+  * accounting — reference↔event bit-identity of outputs AND of
+    cycles/messages/bytes/busy/SRAM-high-water on every schedule;
+  * polyhedral — frontier-table contract tests for the new dependency
+    patterns (row-wise layernorm/softmax = pointwise finalize-per-row;
+    dynamic matmul's broadcast ``b`` operand = all-or-nothing), checked
+    against a brute-force dependency oracle on whichever backend is active
+    (CI runs both the exact islpy backend and the ``fisl`` fallback).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+import pytest
+
+from repro.core import (DynMatmulDescriptor, Simulator, build_lenet_like,
+                        build_tiny_transformer, compile_model,
+                        execute_reference, make_chip, make_mesh,
+                        place_tenants, poly)
+from repro.core.lowering import (WriteSpec, broadcast_read_relation,
+                                 pointwise_read_relation)
+
+Point = Tuple[int, ...]
+
+SEQ, D_MODEL = 4, 8
+
+
+def _images(n: int, shape=(D_MODEL, SEQ, 1), seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=shape).astype(np.float32) for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def xfmr():
+    graph = build_tiny_transformer()
+    chip = make_chip(12, "banded")
+    return graph, chip, compile_model(graph, chip)
+
+
+# ------------------------------------------------------- functional contract
+@pytest.mark.parametrize("engine", ["event", "reference"])
+@pytest.mark.parametrize("plane", ["numpy", "reference"])
+def test_outputs_match_oracle(xfmr, engine, plane):
+    graph, chip, prog = xfmr
+    images = _images(2)
+    sim = Simulator(prog, chip, check_raw=True, engine=engine,
+                    compute_plane=plane)
+    outs, _ = sim.run(images, schedule="pipelined")
+    for img, out in zip(images, outs):
+        want = execute_reference(graph, {"x": img})
+        for v in want:
+            np.testing.assert_allclose(out[v], want[v], rtol=1e-5, atol=1e-5)
+
+
+def test_explicit_transpose_variant_matches():
+    """matmul(q, transpose(k)) computes bit-for-bit the same attention as
+    matmul(q, k, transpose_b=True) — the runtime matrix assembled from the
+    transposed SRAM array carries identical values."""
+    chip = make_chip(12, "banded")
+    images = _images(2)
+    outs = []
+    for xt in (False, True):
+        graph = build_tiny_transformer(explicit_transpose=xt)
+        sim = Simulator(compile_model(graph, chip), chip, check_raw=True)
+        outs.append(sim.run(images)[0])
+    for oa, ob in zip(*outs):
+        for v in oa:
+            np.testing.assert_array_equal(oa[v], ob[v])
+
+
+def test_post_gemm_softmax_1d():
+    """softmax/layernorm over a 1-D post-gemm tensor (the 'full' write-spec
+    branch) — classifier head with a probability output."""
+    rng = np.random.default_rng(3)
+    from repro.core import Graph
+    g = Graph()
+    x = g.add_input("x", (2, 4, 4))
+    w = g.add_weight("w", rng.normal(size=(3, 2, 3, 3), scale=0.4))
+    wf = g.add_weight("wf", rng.normal(size=(5, 3), scale=0.3))
+    h = g.conv2d("conv", x, w)
+    h = g.maxpool2d("pool", h)
+    h = g.flatten("flat", h)
+    h = g.gemm("fc", h, wf)
+    out = g.softmax("probs", h)
+    g.mark_output(out)
+    g.validate()
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(g, chip)
+    images = _images(2, shape=(2, 4, 4))
+    for engine in ("event", "reference"):
+        sim = Simulator(prog, chip, check_raw=True, engine=engine)
+        outs, _ = sim.run(images)
+        for img, out_ in zip(images, outs):
+            want = execute_reference(g, {"x": img})
+            for v in want:
+                np.testing.assert_allclose(out_[v], want[v],
+                                           rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- accounting contract
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+def test_engine_bit_identity(xfmr, schedule):
+    graph, chip, prog = xfmr
+    images = _images(3)
+    runs = {}
+    for engine in ("event", "reference"):
+        sim = Simulator(prog, chip, check_raw=True, engine=engine)
+        runs[engine] = sim.run(images, schedule=schedule)
+    (eo, es), (ro, rs) = runs["event"], runs["reference"]
+    assert es.cycles == rs.cycles
+    assert es.messages == rs.messages
+    assert es.bytes_sent == rs.bytes_sent
+    assert dict(es.busy) == dict(rs.busy)
+    assert dict(es.sram_high_water) == dict(rs.sram_high_water)
+    assert es.gcu_start_cycle == rs.gcu_start_cycle
+    assert es.completion_cycle == rs.completion_cycle
+    for oa, ob in zip(eo, ro):
+        for v in oa:
+            np.testing.assert_array_equal(oa[v], ob[v])
+
+
+def test_plane_bit_identity(xfmr):
+    """Stacked numpy plane ≡ per-iteration reference plane, bit for bit —
+    including the DPU dynamic-matmul batch path."""
+    graph, chip, prog = xfmr
+    images = _images(3)
+    outs = {}
+    for plane in ("numpy", "reference"):
+        sim = Simulator(prog, chip, check_raw=False, compute_plane=plane)
+        outs[plane] = sim.run(images)[0]
+    for oa, ob in zip(outs["numpy"], outs["reference"]):
+        for v in oa:
+            np.testing.assert_array_equal(oa[v], ob[v])
+
+
+def test_chips2_bitwise_equal_single_chip():
+    graph = build_tiny_transformer()
+    chip = make_chip(6, "banded")
+    mesh = make_mesh(2, chip=chip)
+    prog2 = compile_model(graph, chip, chips=2)
+    assert prog2.dma_streams, "2-chip compile must cut the partition chain"
+    wide = make_chip(12, "banded")
+    prog1 = compile_model(graph, wide)
+    images = _images(2)
+    link_stats = {}
+    for engine in ("event", "reference"):
+        o2, s2 = Simulator(prog2, mesh, check_raw=True,
+                           engine=engine).run(images)
+        o1, _ = Simulator(prog1, wide, check_raw=True,
+                          engine=engine).run(images)
+        for oa, ob in zip(o2, o1):
+            for v in oa:
+                np.testing.assert_array_equal(oa[v], ob[v])
+        link_stats[engine] = {k: (ls.messages, ls.bytes, ls.busy)
+                              for k, ls in s2.links.items()}
+        assert link_stats[engine], "cut edges must ride the mesh links"
+    assert link_stats["event"] == link_stats["reference"]
+
+
+def test_tenant_coresidency_bitwise():
+    """Transformer + CNN co-resident on one chip: shared GCU/DMA only, so
+    each tenant's outputs are bitwise those of the same program alone."""
+    chip = make_chip(16, "banded")
+    gx, gl = build_tiny_transformer(), build_lenet_like()
+    tp = place_tenants([gx, gl], chip)
+    ix = _images(2)
+    il = _images(2, shape=(1, 12, 12), seed=7)
+    sim = Simulator(tp.programs, chip, check_raw=True)
+    outs, _ = sim.run([ix[0], il[0], ix[1], il[1]], tenants=[0, 1, 0, 1])
+    alone_x, _ = Simulator(tp.programs[0], chip, check_raw=True).run(ix)
+    alone_l, _ = Simulator(tp.programs[1], chip, check_raw=True).run(il)
+    for got, want in ((outs[0], alone_x[0]), (outs[2], alone_x[1]),
+                      (outs[1], alone_l[0]), (outs[3], alone_l[1])):
+        for v in got:
+            np.testing.assert_array_equal(got[v], want[v])
+
+
+# ------------------------------------------------------------ lowering shape
+def test_dyn_matmul_descriptor_and_reshape_alias(xfmr):
+    graph, chip, prog = xfmr
+    mm_cores = [c for c in prog.cores.values()
+                if any(n.op == "matmul" for n in c.dpu_nodes)]
+    assert len(mm_cores) == 2                      # QKᵀ and attn·V
+    for c in mm_cores:
+        assert c.xbar_node is None and c.compute is None
+        (desc,) = c.dyn_compute.values()
+        assert isinstance(desc, DynMatmulDescriptor)
+        assert desc.a_value in c.lcu and desc.b_value in c.lcu
+    qk = next(d for c in mm_cores for d in c.dyn_compute.values()
+              if d.transpose_b)
+    assert qk.a_value == "q_proj:out" and qk.b_value == "k_proj:out"
+    assert qk.scale == pytest.approx(1.0 / np.sqrt(8.0))
+    # the reshape head is an alias: the classifier core's LCU reads the
+    # residual stream directly
+    cls = next(c for c in prog.cores.values()
+               if c.xbar_node is not None and c.xbar_node.name == "cls")
+    assert set(cls.lcu) == {"res2:out"}
+
+
+# ------------------------------------------- frontier-table contract (poly)
+def _brute_safe_trace(W1, R2):
+    """After each write iteration: the exact set of safe reader iterations
+    (prefix property included — same oracle as test_frontier_tables)."""
+    w_pairs = poly.enumerate_map(W1)
+    writes_by_iter: Dict[Point, List[Point]] = {}
+    for i, o in w_pairs:
+        writes_by_iter.setdefault(i, []).append(o)
+    r_pairs = poly.enumerate_map(R2)
+    reader_space = sorted({j for j, _ in r_pairs})
+    ever = {o for _, o in w_pairs}
+    deps: Dict[Point, Set[Point]] = {j: set() for j in reader_space}
+    for j, o in r_pairs:
+        if o in ever:
+            deps[j].add(o)
+    stream = [(i, writes_by_iter[i]) for i in sorted(writes_by_iter)]
+    seen: Set[Point] = set()
+    trace = []
+    for _, locs in stream:
+        seen.update(locs)
+        safe: Set[Point] = set()
+        ok = True
+        for j in reader_space:
+            if not ok:
+                break
+            if deps[j] <= seen:
+                safe.add(j)
+            else:
+                ok = False
+        trace.append(safe)
+    return stream, reader_space, trace
+
+
+def _check_case(W1, R2, array_shape, reader_bounds):
+    dep = poly.compute_dep_info(W1, R2)
+    _, fn = poly.generate_s_evaluator(dep)
+    frontier = poly.Frontier(dep, fn)
+    table = poly.compile_frontier_table(dep, array_shape, reader_bounds)
+    bound_rank = -1
+    stream, reader_space, trace = _brute_safe_trace(W1, R2)
+    for (_, locs), safe_now in zip(stream, trace):
+        for loc in locs:
+            frontier.observe(loc)
+            bound_rank = max(bound_rank, int(table.rank[loc]))
+        if table.never_constrains or bound_rank == table.d_lexmax_rank:
+            limit = poly.INF_RANK
+        else:
+            limit = max(bound_rank, table.d_lexmin_rank - 1)
+        for j in reader_space:
+            want = j in safe_now
+            assert frontier.safe(j) == want, (j, safe_now)
+            assert (poly.iter_rank(j, reader_bounds) <= limit) == want, \
+                ("table", j, limit, want)
+    return table
+
+
+@pytest.mark.parametrize("c,t", [(3, 4), (4, 6), (1, 5)])
+def test_rowwise_pointwise_table(c, t):
+    """layernorm/softmax pattern: pixel producer over (C, T, 1), pointwise
+    reader over (T, 1) — each row finalizes exactly at its own iteration."""
+    W1 = WriteSpec("A", "pixel", (c, t, 1)).isl_write("WR")
+    R2 = pointwise_read_relation("RD", (t, 1), (c, t, 1))
+    table = _check_case(W1, R2, (c, t, 1), (t, 1))
+    for ci in range(c):
+        for ti in range(t):
+            assert int(table.rank[ci, ti, 0]) == ti
+    assert table.d_lexmin_rank == 0
+    assert table.d_lexmax_rank == t - 1
+
+
+@pytest.mark.parametrize("c,h,rb", [(3, 4, (4, 1)), (4, 4, (6, 1)),
+                                    (2, 5, (2, 1))])
+def test_broadcast_operand_table(c, h, rb):
+    """Dynamic matmul's ``b`` operand / transpose input: every reader
+    iteration needs the whole array, so the table is all-or-nothing — only
+    the producer's last write advances the frontier, and it saturates."""
+    W1 = WriteSpec("A", "pixel", (c, h, 1)).isl_write("WR")
+    R2 = broadcast_read_relation("RD", rb, (c, h, 1))
+    table = _check_case(W1, R2, (c, h, 1), rb)
+    total = rb[0] * rb[1]
+    assert table.d_lexmin_rank == 0
+    assert table.d_lexmax_rank == total - 1
+    # only the locations of the last write iteration unlock anything
+    assert (table.rank[:, :h - 1, :] == -1).all()
+    assert (table.rank[:, h - 1, 0] == total - 1).all()
+
+
+def test_matmul_self_operand_union():
+    """matmul(x, x): the same array read pointwise (operand a) AND broadcast
+    (operand b).  The union relation must collapse to the broadcast gate."""
+    c, h, rb = 3, 4, (4, 1)
+    W1 = WriteSpec("A", "pixel", (c, h, 1)).isl_write("WR")
+    R2 = pointwise_read_relation("RD", rb, (c, h, 1)).union(
+        broadcast_read_relation("RD", rb, (c, h, 1)))
+    dep = poly.compute_dep_info(W1, R2)
+    table = poly.compile_frontier_table(dep, (c, h, 1), rb)
+    bcast = poly.compile_frontier_table(
+        poly.compute_dep_info(
+            W1, broadcast_read_relation("RD", rb, (c, h, 1))),
+        (c, h, 1), rb)
+    np.testing.assert_array_equal(table.rank, bcast.rank)
+    assert table.d_lexmin_rank == bcast.d_lexmin_rank
+    assert table.d_lexmax_rank == bcast.d_lexmax_rank
+
+
+def test_broadcast_after_pool_producer():
+    """Broadcast consumer fed by a pool-kind producer (windows finalize
+    late): the gate must wait for the *pool-order* last write."""
+    c, h, w, k, s = 2, 6, 6, 2, 2
+    ph, pw = (h - k) // s + 1, (w - k) // s + 1
+    W1 = WriteSpec("A", "pool", (c, ph, pw),
+                   dict(k=k, stride=s)).isl_write("WR")
+    R2 = broadcast_read_relation("RD", (3, 1), (c, ph, pw))
+    _check_case(W1, R2, (c, ph, pw), (3, 1))
