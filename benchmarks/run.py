@@ -5,6 +5,7 @@
   bench_lcu      — generated-code vs table LCU (paper §3.4/§3.5)
   bench_kernels  — Pallas kernels vs jnp oracles
   bench_train    — end-to-end host train/serve sanity
+  bench_faults   — goodput/latency under injected faults + recovery
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only pipeline,...] [--smoke]
 
@@ -155,12 +156,14 @@ def main() -> None:
                     help="absolute wall-clock slack in ms (--check)")
     args = ap.parse_args()
 
-    from . import (bench_compile, bench_compression, bench_kernels,
-                   bench_lcu, bench_pipeline, bench_serve, bench_train)
+    from . import (bench_compile, bench_compression, bench_faults,
+                   bench_kernels, bench_lcu, bench_pipeline, bench_serve,
+                   bench_train)
     modules = {
         "pipeline": bench_pipeline, "compile": bench_compile,
         "lcu": bench_lcu, "kernels": bench_kernels, "train": bench_train,
         "serve": bench_serve, "compression": bench_compression,
+        "faults": bench_faults,
     }
     if args.only:
         wanted = args.only.split(",")

@@ -1,11 +1,12 @@
 """cmnnc core: the paper's compiler + CM-accelerator simulator."""
 
-from .compiler import (TenantPlacement, compile_model, place_tenants,
-                       serialize_config)
+from .compiler import (CompileValidationError, TenantPlacement,
+                       compile_model, place_tenants, serialize_config,
+                       validate_program)
 from .compute_plane import (ComputeDescriptor, ComputePlane,
-                            DynMatmulDescriptor, NumpyPlane, PallasPlane,
-                            ReferencePlane, dequantize_int8, make_descriptor,
-                            resolve_plane)
+                            DynMatmulDescriptor, NoisyPlane, NumpyPlane,
+                            PallasPlane, ReferencePlane, dequantize_int8,
+                            make_descriptor, resolve_plane)
 from .graph import (Graph, build_fig2_graph, build_lenet_like,
                     build_resnet_block_chain, build_tiny_transformer,
                     execute_reference)
@@ -31,7 +32,8 @@ __all__ = [
     "DeadlockError", "LinkStats", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
     "compile_model", "serialize_config", "TenantPlacement", "place_tenants",
-    "ComputeDescriptor", "ComputePlane", "DynMatmulDescriptor", "NumpyPlane",
-    "PallasPlane", "ReferencePlane", "dequantize_int8", "make_descriptor",
-    "resolve_plane",
+    "CompileValidationError", "validate_program",
+    "ComputeDescriptor", "ComputePlane", "DynMatmulDescriptor", "NoisyPlane",
+    "NumpyPlane", "PallasPlane", "ReferencePlane", "dequantize_int8",
+    "make_descriptor", "resolve_plane",
 ]

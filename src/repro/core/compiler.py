@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import List, Optional, Sequence, Tuple
 
 from .graph import Graph
@@ -23,9 +24,114 @@ from .lowering import AcceleratorProgram, lower
 from .partition import PartitionError, partition_chips, partition_graph
 
 
+class CompileValidationError(Exception):
+    """A compiled program violates a post-mapping invariant.
+
+    ``invariant`` names which one: ``"cores-on-chip"`` (a partition was
+    mapped to a core id outside the chip/mesh), ``"cut-edge-link"`` (a
+    cross-partition data edge has no interconnect link / mesh link under
+    it), or ``"sram-fits"`` (a core's static SRAM footprint — padded input
+    buffers plus pool accumulators — exceeds the core spec).
+    """
+
+    def __init__(self, invariant: str, message: str):
+        super().__init__(f"[{invariant}] {message}")
+        self.invariant = invariant
+
+
+def validate_program(prog: AcceleratorProgram,
+                     chip: ChipSpec = None) -> None:
+    """Check post-mapping invariants, raising :class:`CompileValidationError`
+    naming the violated one (instead of failing deep inside the simulator).
+
+    ``chip`` is required for single-chip programs (the program itself only
+    records the mesh); mesh programs validate against ``prog.mesh``.
+    """
+    mesh = prog.mesh
+    if chip is None:
+        if mesh is None:
+            raise ValueError("validate_program needs the ChipSpec for "
+                             "single-chip programs")
+        chip = mesh.chip
+    total = mesh.n_cores_total if mesh is not None else chip.n_cores
+
+    # 1. every partition's core exists on its assigned chip
+    for p, c in sorted(prog.mapping.items()):
+        if not 0 <= c < total:
+            raise CompileValidationError(
+                "cores-on-chip",
+                f"partition {p} mapped to core {c} outside [0, {total})")
+        if c not in prog.cores:
+            raise CompileValidationError(
+                "cores-on-chip",
+                f"partition {p} mapped to core {c} with no CoreConfig")
+    for cid in prog.cores:
+        if not 0 <= cid < total:
+            raise CompileValidationError(
+                "cores-on-chip", f"core id {cid} outside [0, {total})")
+
+    # 2. every cut edge rides a link: intra-chip edges need an interconnect
+    # edge, cross-chip edges need a mesh link (GCU input, src_partition
+    # -1, arrives through GMEM and needs neither)
+    for cid, cfg in sorted(prog.cores.items()):
+        for v, lc in cfg.lcu.items():
+            if lc.src_partition < 0:
+                continue
+            src = prog.mapping.get(lc.src_partition)
+            if src is None:
+                raise CompileValidationError(
+                    "cut-edge-link",
+                    f"core {cid} input {v!r} from unmapped partition "
+                    f"{lc.src_partition}")
+            if src == cid:
+                continue
+            if mesh is not None:
+                ca, cb = mesh.chip_of(src), mesh.chip_of(cid)
+                if ca != cb:
+                    if (ca, cb) not in mesh.links:
+                        raise CompileValidationError(
+                            "cut-edge-link",
+                            f"edge core {src} -> {cid} ({v!r}) needs mesh "
+                            f"link ({ca}, {cb}) which does not exist")
+                    continue
+                la, lb = mesh.local_core(src), mesh.local_core(cid)
+                if (la, lb) not in mesh.chip.edges:
+                    raise CompileValidationError(
+                        "cut-edge-link",
+                        f"edge core {src} -> {cid} ({v!r}) has no "
+                        f"interconnect edge ({la}, {lb}) on chip {ca}")
+            elif (src, cid) not in chip.edges:
+                raise CompileValidationError(
+                    "cut-edge-link",
+                    f"edge core {src} -> {cid} ({v!r}) has no interconnect "
+                    f"edge on the chip")
+
+    # 3. static SRAM high-water fits the core spec: padded float32 input
+    # buffers + pool accumulators (what the simulator actually allocates
+    # per in-flight image)
+    values = prog.pgraph.graph.values
+    for cid, cfg in sorted(prog.cores.items()):
+        need = 0
+        for v, lc in cfg.lcu.items():
+            shp = lc.shape
+            if len(shp) == 3 and lc.pad:
+                c_, h, w = shp
+                need += 4 * c_ * (h + 2 * lc.pad) * (w + 2 * lc.pad)
+            else:
+                need += 4 * math.prod(shp)
+        for n in cfg.dpu_nodes:
+            if n.op in ("maxpool2d", "avgpool2d", "global_avgpool"):
+                need += values[n.outputs[0]].nbytes
+        if need > chip.core.sram_bytes:
+            raise CompileValidationError(
+                "sram-fits",
+                f"core {cid}: static SRAM footprint {need}B > "
+                f"{chip.core.sram_bytes}B spec")
+
+
 def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
-                  chips: int = 1, mesh: ChipMesh = None
-                  ) -> AcceleratorProgram:
+                  chips: int = 1, mesh: ChipMesh = None,
+                  validate: bool = False) -> AcceleratorProgram:
     """End-to-end compilation, optionally scaled out to a multi-chip mesh.
 
     ``chips=1`` (default) is the paper's single-chip flow, unchanged.
@@ -36,16 +142,24 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
     independently, and ``lower`` materializes the cut edges as inter-chip
     DMA streams — the LCU frontier tables are untouched (the polyhedral
     control logic is agnostic to *where* a dependence edge lands).
+
+    ``validate=True`` runs :func:`validate_program` on the result — the
+    post-mapping invariant checker that fails fast, by name, instead of
+    deep inside a simulation.
     """
     if mesh is None and chips > 1:
         mesh = make_mesh(chips, chip=chip)
     pg = partition_graph(graph)
     if mesh is None:
         mapping = map_partitions(pg, chip)
-        return lower(pg, mapping, quantizer=quantizer)
-    chip_assign = partition_chips(pg, mesh)
-    mapping = map_partitions_mesh(pg, mesh, chip_assign)
-    return lower(pg, mapping, quantizer=quantizer, mesh=mesh)
+        prog = lower(pg, mapping, quantizer=quantizer)
+    else:
+        chip_assign = partition_chips(pg, mesh)
+        mapping = map_partitions_mesh(pg, mesh, chip_assign)
+        prog = lower(pg, mapping, quantizer=quantizer, mesh=mesh)
+    if validate:
+        validate_program(prog, chip)
+    return prog
 
 
 # ----------------------------------------------------- multi-tenant placement

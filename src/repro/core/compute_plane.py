@@ -238,6 +238,63 @@ class CustomPlane(ComputePlane):
         return np.asarray(self._batch(desc.matrix, V))
 
 
+class NoisyPlane(ComputePlane):
+    """Seeded Gaussian conductance noise on top of any backend.
+
+    Each crossbar call draws a fresh matrix-shaped perturbation from this
+    instance's own RNG stream and evaluates against
+    ``matrix * (1 + sigma * g)`` — the read-noise model (every analog MxV
+    sees slightly different conductances), the first brick of the ROADMAP
+    quantized-accuracy harness.  Determinism contract: same seed + same
+    call sequence => bit-identical outputs (tested in ``test_faults.py``);
+    because the draw happens *per call*, the two simulator engines (which
+    batch calls differently) are NOT expected to match each other under
+    noise — use :class:`repro.faults.FaultyPlane` for engine-invariant
+    (programming-time) perturbations.
+
+    ``sigma=0`` skips the multiply entirely and is bit-identical to the
+    inner plane.  ``reset()`` rewinds the RNG stream for replay.
+    """
+
+    name = "noisy"
+
+    def __init__(self, sigma: float, inner: "ComputePlane" = None,
+                 seed: int = 0):
+        if not (sigma >= 0):                 # also rejects NaN
+            raise ValueError(f"sigma must be >= 0, got {sigma}")
+        self.sigma = float(sigma)
+        self.seed = int(seed)
+        self.inner = inner if inner is not None else NumpyPlane()
+        self.reset()
+
+    def reset(self):
+        """Rewind the noise stream to the post-construction state."""
+        self._rng = np.random.default_rng(self.seed)
+
+    def _noisy(self, desc: ComputeDescriptor) -> ComputeDescriptor:
+        g = self._rng.standard_normal(desc.matrix.shape)
+        m = np.ascontiguousarray(
+            desc.matrix * (1.0 + self.sigma * g), np.float32)
+        return make_descriptor(m, desc.op)
+
+    def mxv_one(self, desc, v):
+        if self.sigma == 0.0:
+            return self.inner.mxv_one(desc, v)
+        return self.inner.mxv_one(self._noisy(desc), v)
+
+    def mxv_batch(self, desc, V):
+        if self.sigma == 0.0:
+            return self.inner.mxv_batch(desc, V)
+        return self.inner.mxv_batch(self._noisy(desc), V)
+
+    def dyn_mxv_one(self, matrix, v):
+        # dynamic matmuls run on the digital DPU — no conductance noise
+        return self.inner.dyn_mxv_one(matrix, v)
+
+    def dyn_mxv_batch(self, matrix, V):
+        return self.inner.dyn_mxv_batch(matrix, V)
+
+
 class PallasPlane(ComputePlane):
     """``kernels/mxv.py`` crossbar kernel as the compute plane.
 

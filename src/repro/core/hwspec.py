@@ -133,6 +133,18 @@ class LinkSpec:
         """Extra arrival cycles for one message of ``nbytes`` on this link."""
         return self.latency + max(0, self.beats(nbytes) - 1)
 
+    def degraded(self, latency_add: int = 0,
+                 width_shrink: int = 1) -> "LinkSpec":
+        """This link with extra latency and/or a fraction of its width —
+        the effective spec while a :class:`repro.faults.LinkFault` is
+        active.  Width never degrades below one byte per cycle."""
+        if latency_add < 0 or width_shrink < 1:
+            raise ValueError("links only degrade: latency_add >= 0 and "
+                             "width_shrink >= 1 required")
+        return LinkSpec(latency=self.latency + int(latency_add),
+                        width_bytes=max(1, self.width_bytes
+                                        // int(width_shrink)))
+
 
 @dataclasses.dataclass(frozen=True)
 class ChipMesh:

@@ -74,18 +74,25 @@ def check_resources(pg: PartitionedGraph, chip: ChipSpec) -> None:
 
 
 def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
-                   timeout_ms: int = 30_000) -> Dict[int, int]:
+                   timeout_ms: int = 30_000,
+                   exclude_cores=()) -> Dict[int, int]:
     """partition idx -> core id, via Z3 (or exhaustive backtracking when the
-    solver is unavailable).  Raises MappingError when UNSAT."""
+    solver is unavailable).  Raises MappingError when UNSAT.
+
+    ``exclude_cores`` withholds core ids from the placement — the fault-
+    recovery path re-solves a tenant's mapping with its dead cores (and any
+    cores other tenants occupy) excluded."""
     check_resources(pg, chip)
     part_ids = list(range(len(pg.partitions)))
     edges = [(s, d) for (s, d) in pg.edges if s != GCU_PARTITION]
-    return _solve_chip(part_ids, edges, chip, timeout_ms)
+    return _solve_chip(part_ids, edges, chip, timeout_ms,
+                       exclude_cores=exclude_cores)
 
 
 def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
                         chip_assign: Optional[Dict[int, int]] = None,
-                        timeout_ms: int = 30_000) -> Dict[int, int]:
+                        timeout_ms: int = 30_000,
+                        exclude_cores=()) -> Dict[int, int]:
     """partition idx -> *global* core id over a multi-chip mesh.
 
     Each chip's partitions are mapped onto that chip's cores independently
@@ -98,6 +105,11 @@ def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
     check_resources(pg, mesh.chip)
     if chip_assign is None:
         chip_assign = partition_chips(pg, mesh)
+    # global exclusions become per-chip local core ids
+    excl_local: Dict[int, set] = {}
+    for gc in exclude_cores:
+        excl_local.setdefault(mesh.chip_of(gc), set()).add(
+            mesh.local_core(gc))
     mapping: Dict[int, int] = {}
     for c in range(mesh.n_chips):
         parts = sorted(p for p, cc in chip_assign.items() if cc == c)
@@ -106,28 +118,37 @@ def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
         edges = [(s, d) for (s, d) in pg.edges
                  if s != GCU_PARTITION
                  and chip_assign[s] == c and chip_assign[d] == c]
-        local = _solve_chip(parts, edges, mesh.chip, timeout_ms)
+        local = _solve_chip(parts, edges, mesh.chip, timeout_ms,
+                            exclude_cores=excl_local.get(c, ()))
         for p, lc in local.items():
             mapping[p] = mesh.global_core(c, lc)
     return mapping
 
 
 def _solve_chip(part_ids, edges, chip: ChipSpec,
-                timeout_ms: int = 30_000) -> Dict[int, int]:
+                timeout_ms: int = 30_000,
+                exclude_cores=()) -> Dict[int, int]:
     """Place ``part_ids`` on one chip's cores: distinct cores, every edge in
     ``edges`` on an interconnect link.  Z3 when available, else exhaustive
-    backtracking (partition graphs are small, so the search is exact)."""
+    backtracking (partition graphs are small, so the search is exact).
+    ``exclude_cores`` (dead/reserved cores) never receive a partition."""
     n_parts = len(part_ids)
-    if n_parts > chip.n_cores:
-        raise MappingError(f"{n_parts} partitions > {chip.n_cores} cores")
+    excluded = frozenset(int(c) for c in exclude_cores)
+    avail = chip.n_cores - len(excluded & frozenset(range(chip.n_cores)))
+    if n_parts > avail:
+        raise MappingError(
+            f"{n_parts} partitions > {avail} available cores"
+            + (f" ({len(excluded)} excluded)" if excluded else ""))
     if not HAVE_Z3:
-        return _map_backtracking(part_ids, edges, chip)
+        return _map_backtracking(part_ids, edges, chip, excluded)
 
     solver = z3.Solver()
     solver.set("timeout", timeout_ms)
     loc = {p: z3.Int(f"loc_{p}") for p in part_ids}
     for v in loc.values():
         solver.add(v >= 0, v < chip.n_cores)
+        for c in sorted(excluded):
+            solver.add(v != c)
     solver.add(z3.Distinct(*loc.values()))
 
     edge_pairs = sorted(chip.edges)
@@ -139,12 +160,14 @@ def _solve_chip(part_ids, edges, chip: ChipSpec,
     if solver.check() != z3.sat:
         raise MappingError(
             f"Z3: no valid mapping of {n_parts} partitions onto "
-            f"{chip.n_cores}-core chip with {len(chip.edges)} links")
+            f"{chip.n_cores}-core chip with {len(chip.edges)} links"
+            + (f" ({sorted(excluded)} excluded)" if excluded else ""))
     model = solver.model()
     return {p: model[loc[p]].as_long() for p in part_ids}
 
 
-def _map_backtracking(part_ids, edges, chip: ChipSpec) -> Dict[int, int]:
+def _map_backtracking(part_ids, edges, chip: ChipSpec,
+                      excluded: frozenset = frozenset()) -> Dict[int, int]:
     """Complete DFS over core assignments with the same constraint set as the
     Z3 encoding: distinct cores, every partition edge on an interconnect link.
     No solution found == UNSAT."""
@@ -168,7 +191,7 @@ def _map_backtracking(part_ids, edges, chip: ChipSpec) -> Dict[int, int]:
             return True
         pidx = order[k]
         for core in range(chip.n_cores):
-            if core in used or not ok(pidx, core):
+            if core in used or core in excluded or not ok(pidx, core):
                 continue
             assign[pidx] = core
             used.add(core)
@@ -181,5 +204,6 @@ def _map_backtracking(part_ids, edges, chip: ChipSpec) -> Dict[int, int]:
     if not dfs(0):
         raise MappingError(
             f"no valid mapping of {len(order)} partitions onto "
-            f"{chip.n_cores}-core chip with {len(chip.edges)} links")
+            f"{chip.n_cores}-core chip with {len(chip.edges)} links"
+            + (f" ({sorted(excluded)} excluded)" if excluded else ""))
     return dict(assign)

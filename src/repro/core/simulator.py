@@ -177,6 +177,10 @@ class SimStats:
     # + 1`` are derived by the runtime; both engines must agree bit-for-bit.
     gcu_start_cycle: Dict[int, int] = dataclasses.field(default_factory=dict)
     completion_cycle: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Deadline failures (fault injection): image -> the cycle it was marked
+    # failed (its deadline).  Disjoint from ``completion_cycle``; a request
+    # appears in exactly one of the two once the run ends.
+    failed_cycle: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def utilization(self, core: int) -> float:
         if core not in self.first_busy:
@@ -253,10 +257,11 @@ class _RequestPlan:
     desc, then arrival, then index)."""
 
     __slots__ = ("arrivals", "tenants", "priorities", "max_inflight",
-                 "out_expected")
+                 "out_expected", "deadlines")
 
     def __init__(self, sim: "Simulator", n_images: int, schedule: str,
-                 arrivals, tenants, max_inflight, priorities):
+                 arrivals, tenants, max_inflight, priorities,
+                 deadlines=None):
         def as_list(x, name, default):
             if x is None:
                 return [default] * n_images
@@ -284,6 +289,24 @@ class _RequestPlan:
         self.out_expected = [
             {v: sim._expected_chunks(v, tk) for v in p.gcu.outputs}
             for tk, p in enumerate(sim.progs)]
+        # Per-image absolute deadline cycle (or None).  An image incomplete
+        # at its deadline is marked failed *at* that cycle — completion is
+        # checked first, so completing exactly at the deadline is a success.
+        if deadlines is None:
+            self.deadlines = [None] * n_images
+        else:
+            dls = list(deadlines)
+            if len(dls) != n_images:
+                raise ValueError(f"deadlines has {len(dls)} entries for "
+                                 f"{n_images} images")
+            self.deadlines = []
+            for i, d in enumerate(dls):
+                if d is not None:
+                    d = int(d)
+                    if d < 0:
+                        raise ValueError(f"deadline cycles must be >= 0, "
+                                         f"got {d} for image {i}")
+                self.deadlines.append(d)
 
     def key(self, i: int):
         if self.priorities is None:
@@ -314,7 +337,7 @@ class Simulator:
     def __init__(self, program, chip,
                  mxv_fn=None, check_raw: bool = True, engine: str = "event",
                  mxv_batch_fn=None, compute_plane="auto",
-                 strict_float_order: bool = True):
+                 strict_float_order: bool = True, faults=None):
         assert engine in ("event", "reference"), engine
         # ``program`` may be a single AcceleratorProgram or a sequence of
         # core-disjoint programs (tenants) co-resident on one chip/mesh.
@@ -352,6 +375,32 @@ class Simulator:
         self.strict_float_order = strict_float_order
         self.check_raw = check_raw
         self.engine = engine
+        # Deterministic fault timeline (duck-typed repro.faults.FaultSchedule
+        # — the core package must not import the faults package).  Both
+        # engines honor the same timeline bit-identically; requests stalled
+        # by a fault are detected via per-image deadlines (``run(deadlines=
+        # ...)``), never simulated forever.
+        self.faults = faults
+        self.dead_at: Dict[int, int] = {}
+        self._faulted_links: frozenset = frozenset()
+        self._link_tl_cache: Dict[Tuple[int, int], tuple] = {}
+        if faults is not None:
+            total = self.mesh.n_cores_total if self.mesh is not None \
+                else self.chip.n_cores
+            self.dead_at = dict(faults.dead_at())
+            bad = [c for c in self.dead_at if not 0 <= c < total]
+            if bad:
+                raise ValueError(f"core faults on cores {sorted(bad)} "
+                                 f"outside [0, {total})")
+            keys = faults.link_keys()
+            if keys:
+                if self.mesh is None:
+                    raise ValueError("link faults require a ChipMesh")
+                unknown = keys - self.mesh.links
+                if unknown:
+                    raise ValueError("link faults on non-existent links "
+                                     f"{sorted(unknown)}")
+                self._faulted_links = keys
 
     def _values_for(self, cfg: CoreConfig):
         """The owning tenant's value-shape table for a core config."""
@@ -377,10 +426,27 @@ class Simulator:
     def _occupancy(link, nbytes: int) -> int:
         return link.beats(nbytes)
 
+    def _link_timeline(self, key, base):
+        """Cached (breaks, states) fault timeline of one mesh link."""
+        tl = self._link_tl_cache.get(key)
+        if tl is None:
+            tl = self.faults.link_timeline(key, base)
+            self._link_tl_cache[key] = tl
+        return tl
+
+    def _fault_link_state(self, key, send_cycle: int, base):
+        """(down, effective LinkSpec) for a message sent at ``send_cycle``."""
+        if key not in self._faulted_links:
+            return False, base
+        breaks, states = self._link_timeline(key, base)
+        return states[int(np.searchsorted(breaks, send_cycle,
+                                          side="right"))]
+
     # ------------------------------------------------------------------- run
     def run(self, images: List[np.ndarray], schedule: str = "pipelined",
             max_cycles: int = 1_000_000, *, arrivals=None, tenants=None,
-            max_inflight: Optional[int] = None, priorities=None
+            max_inflight: Optional[int] = None, priorities=None,
+            deadlines=None
             ) -> Tuple[List[Dict[str, np.ndarray]], SimStats]:
         """Simulate ``images`` through the resident program(s).
 
@@ -400,11 +466,19 @@ class Simulator:
                            highest-priority *arrived* pending image at each
                            decision point instead of FIFO (ties: earlier
                            arrival, then lower image index).
+        ``deadlines``    — per-image absolute deadline cycle (or None): an
+                           image incomplete at that cycle is marked failed
+                           there (``SimStats.failed_cycle``), its admission
+                           slot freed the same cycle.  Completion at the
+                           deadline cycle still counts as success.  This is
+                           the failure-detection contract: a request stalled
+                           by an injected fault resolves at its deadline
+                           instead of hanging the run.
         """
         assert schedule in ("pipelined", "sequential")
         n = len(images)
         plan = _RequestPlan(self, n, schedule, arrivals, tenants,
-                            max_inflight, priorities)
+                            max_inflight, priorities, deadlines)
         if self.engine == "reference":
             return self._run_reference(images, schedule, max_cycles, plan)
         return _EventEngine(self, images, schedule, max_cycles, plan).run()
@@ -424,6 +498,9 @@ class Simulator:
             for i in range(n_images)]
         out_counts = [defaultdict(int) for _ in range(n_images)]
         img_complete = [False] * n_images
+        failed = [False] * n_images
+        dl = plan.deadlines
+        dead_at = self.dead_at
         core_done = defaultdict(bool)        # (core, image) -> finished
 
         # GCU stream cursor: one shared host DMA across all tenants.  The
@@ -470,19 +547,31 @@ class Simulator:
                     st = state(m.dst_core, m.image)
                     self._sram_write(self.cores_merged[m.dst_core], st, m)
             for im in range(n_images):
-                if not img_complete[im] and all(
+                if not img_complete[im] and not failed[im] and all(
                         out_counts[im][v] >= plan.out_expected[tenants[im]][v]
                         for v in progs[tenants[im]].gcu.outputs):
                     img_complete[im] = True
                     stats.completion_cycle[im] = cycle
+            # deadline check AFTER completion: finishing exactly at the
+            # deadline cycle is a success, missing it fails the image here
+            for im in range(n_images):
+                if dl[im] is not None and dl[im] <= cycle \
+                        and not img_complete[im] and not failed[im]:
+                    failed[im] = True
+                    stats.failed_cycle[im] = cycle
+                    progress = True
 
-            # 2. GCU streaming (arrivals next cycle)
+            # 2. GCU streaming (arrivals next cycle).  Failed images free
+            # their in-flight slot and drop out of the candidate pool; an
+            # in-progress stream is never aborted (the GCU is a dumb DMA).
             if cur_req is None and n_started < n_images:
                 n_live = sum(1 for i in range(n_images)
-                             if started[i] and not img_complete[i])
+                             if started[i] and not img_complete[i]
+                             and not failed[i])
                 if n_live < K:
                     cands = [i for i in range(n_images)
-                             if not started[i] and plan.arrivals[i] <= cycle]
+                             if not started[i] and not failed[i]
+                             and plan.arrivals[i] <= cycle]
                     if cands:
                         cur_req = min(cands, key=plan.key)
                         cur_pix = 0
@@ -512,6 +601,9 @@ class Simulator:
 
             # 3. core execution (based on start-of-cycle state)
             for core_id, cfg in self.cores_merged.items():
+                d = dead_at.get(core_id)
+                if d is not None and cycle >= d:
+                    continue                 # dead core: executes nothing
                 img = current_image(core_id)
                 if img is None:
                     continue
@@ -547,13 +639,20 @@ class Simulator:
             for core, b in live.items():
                 stats.sram_high_water[core] = max(stats.sram_high_water[core], b)
 
-            if all(img_complete):
+            if all(c or f for c, f in zip(img_complete, failed)):
                 stats.cycles = cycle + 1
                 return outputs, stats
-            waiting_arrival = any(not started[i] and plan.arrivals[i] > cycle
+            waiting_arrival = any(not started[i] and not failed[i]
+                                  and plan.arrivals[i] > cycle
                                   for i in range(n_images))
+            # a stalled pipeline with a pending deadline is not a deadlock:
+            # the affected image resolves (fails) at its deadline cycle
+            waiting_deadline = any(
+                dl[i] is not None and dl[i] > cycle
+                and not img_complete[i] and not failed[i]
+                for i in range(n_images))
             if not progress and not inflight and cur_req is None \
-                    and not waiting_arrival:
+                    and not waiting_arrival and not waiting_deadline:
                 raise DeadlockError(
                     f"no progress at cycle {cycle}; "
                     f"complete={img_complete}, "
@@ -785,6 +884,12 @@ class Simulator:
                 link, key = self._link_for(cfg.core_id, dst)
                 delay = 0
                 if link is not None:
+                    # fault state at the SEND cycle governs the message:
+                    # a down link drops it (not delivered, not counted),
+                    # a degraded link applies its effective spec
+                    down, link = self._fault_link_state(key, cycle, link)
+                    if down:
+                        continue
                     delay = link.transfer_delay(payload.nbytes)
                     if stats is not None:
                         ls = stats.links.setdefault(key, LinkStats())
@@ -1012,6 +1117,10 @@ class _EventEngine:
         self.out_expected = plan.out_expected
         self.img_complete = [False] * self.n_images
         self.complete_cycle: Dict[int, int] = {}   # img -> exact cycle
+        self.img_failed = [False] * self.n_images
+        self.failed_cycle: Dict[int, int] = {}     # img -> deadline cycle
+        self._retired: set = set()   # images whose admission slot was freed
+        self.dead_at = sim.dead_at
         self.out_last_arrive = [0] * self.n_images
         self.done_cycle: Dict[Tuple[int, int], int] = {}
         self.gcu_done_cycle: Dict[int, int] = {}
@@ -1096,6 +1205,12 @@ class _EventEngine:
         for cid in self.cores:
             self._sched_core(cid, 0)
         self._push(min(self.plan.arrivals), _PH_GCU, 0, "gcu", 0)
+        # deadline events fire after the cycle's deliveries (order 0) and
+        # admit retirements (order 1): completion at the deadline cycle is
+        # checked first, mirroring the reference's phase-1 ordering
+        for i, d in enumerate(self.plan.deadlines):
+            if d is not None:
+                self._push(d, _PH_DELIVER, 2, "deadline", i)
 
         heap = self.heap
         while heap:
@@ -1110,6 +1225,8 @@ class _EventEngine:
                 self._gcu_stream(cycle, data)
             elif kind == "admit":
                 self._gcu_retire(cycle, data)
+            elif kind == "deadline":
+                self._deadline(cycle, data)
             else:  # "core"
                 self._sched_keys.discard((data, cycle))
                 self._core_step(cycle, data)
@@ -1154,8 +1271,22 @@ class _EventEngine:
             ls.busy += n * occ
         stats.gcu_start_cycle = dict(self.gcu_start)
         stats.completion_cycle = dict(self.complete_cycle)
+        stats.failed_cycle = dict(self.failed_cycle)
         self._replay_high_water(stats)
         return stats
+
+    def _refresh_end(self) -> None:
+        """Recompute ``t_end`` once every image is complete-or-failed.
+
+        Called from completion and deadline handlers; a deadline can
+        *revert* a premature bulk-delivery completion claim (rows that would
+        land after the deadline), so the end cycle is recomputed rather than
+        latched.  Every event popped so far has cycle <= the new end, so a
+        shrinking ``t_end`` never un-processes anything.
+        """
+        if all(c or f for c, f in zip(self.img_complete, self.img_failed)):
+            self.t_end = max(list(self.complete_cycle.values())
+                             + list(self.failed_cycle.values()))
 
     def _replay_high_water(self, stats: SimStats) -> None:
         """Replay end-of-cycle SRAM sampling from the buffer-lifetime log.
@@ -1241,13 +1372,63 @@ class _EventEngine:
             self._push(end + 1, _PH_GCU, 0, "gcu", 0)
 
     def _gcu_retire(self, t: int, img: int) -> None:
-        """An in-flight image completed (fired at its exact completion
-        cycle, delivery phase — the same cycle the reference engine's
-        admission gate sees the slot free)."""
+        """An in-flight image resolved — completed (fired at its exact
+        completion cycle, delivery phase — the same cycle the reference
+        engine's admission gate sees the slot free) or deadline-failed.
+        Idempotent: a deadline may free the slot before a stale "admit"
+        event from a reverted completion claim fires."""
+        if img in self._retired:
+            return
+        self._retired.add(img)
         self.gcu_inflight -= 1
         if self.gcu_blocked and self.gcu_inflight < self.plan.max_inflight:
             self.gcu_blocked = False
             self._push(t, _PH_GCU, 0, "gcu", 0)
+
+    def _deadline(self, t: int, img: int) -> None:
+        """Deadline event: fail the image unless it completed by now.
+
+        A bulk delivery may have stamped a completion cycle PAST the
+        deadline (its rows were still in flight at ``t``); the reference
+        engine fails such an image at the deadline, so the premature claim
+        is reverted here before failing.
+        """
+        if self.img_failed[img]:
+            return
+        cc = self.complete_cycle.get(img)
+        if cc is not None and cc <= t:
+            return                            # made the deadline
+        if cc is not None:                    # premature bulk claim: revert
+            del self.complete_cycle[img]
+            self.img_complete[img] = False
+        self.img_failed[img] = True
+        self.failed_cycle[img] = t
+        if img in self.gcu_start:             # started: free its slot now
+            self._gcu_retire(t, img)
+        else:                                 # unstarted: never admit it
+            if img in self.gcu_unstarted:
+                self.gcu_unstarted.remove(img)
+            self._retired.add(img)
+        self._refresh_end()
+
+    def _link_segments(self, key, base, send: np.ndarray):
+        """Split a stream's send cycles into contiguous fault-timeline
+        segments: ``(slice, down, effective LinkSpec)`` per run.  ``send``
+        is non-decreasing, so each timeline state covers one contiguous
+        run of rows; unfaulted links short-circuit to a single segment."""
+        if key not in self.sim._faulted_links:
+            return [(slice(0, len(send)), False, base)]
+        breaks, states = self.sim._link_timeline(key, base)
+        idx = np.searchsorted(breaks, send, side="right")
+        out = []
+        start, n = 0, len(send)
+        while start < n:
+            v = int(idx[start])
+            end = start + int(np.searchsorted(idx[start:], v, side="right"))
+            down, spec = states[v]
+            out.append((slice(start, end), down, spec))
+            start = end
+        return out
 
     # ------------------------------------------------------------- delivery
     # Streams are delivered in ONE event at their first arrival cycle: SRAM
@@ -1273,14 +1454,15 @@ class _EventEngine:
         if s.arrive[-1] > last:
             last = int(s.arrive[-1])
             self.out_last_arrive[s.img] = last
+        if self.img_failed[s.img]:
+            return        # failed images never complete (reference contract)
         tk = self.tenants[s.img]
         if not self.img_complete[s.img] and all(
                 counts[v] >= self.out_expected[tk][v]
                 for v in self.progs[tk].gcu.outputs):
             self.img_complete[s.img] = True
             self.complete_cycle[s.img] = last
-            if self.t_end is None and all(self.img_complete):
-                self.t_end = max(self.complete_cycle.values())
+            self._refresh_end()
             # in-flight slot frees at the exact completion cycle, which may
             # lie past this bulk delivery's pop cycle
             self._push(last, _PH_DELIVER, 1, "admit", s.img)
@@ -1345,7 +1527,14 @@ class _EventEngine:
         # the reference engine only *considers* this image once the previous
         # one retired (done + 1 == next_free), so a first-touch creation here
         # is stamped at that cycle, not at the (possibly earlier) wake event
-        st = self._state(cid, img, max(t, core.next_free))
+        consider = max(t, core.next_free)
+        d = self.dead_at.get(cid)
+        if d is not None and consider >= d:
+            # dead before first considering this image: the reference's
+            # phase-3 skip fires before its state() first-touch, so no
+            # state may be created here either (SRAM accounting parity)
+            return
+        st = self._state(cid, img, consider)
         if st.done:
             return
         floor = 0
@@ -1372,6 +1561,17 @@ class _EventEngine:
                 np.maximum(unlock, fr.unlock_vector(ranks), out=unlock)
         rel = self._rel[:k]
         cycles = rel + np.maximum.accumulate(unlock - rel)
+        if d is not None:
+            # dead core: only iterations paced strictly before the death
+            # cycle execute.  ``cycles`` is strictly increasing, and any
+            # later recompute of a truncated iteration's cycle can only be
+            # >= its value here, so the cut is exact and wakes past the
+            # death are no-ops — the stalled stream is detected downstream
+            # via request deadlines.
+            alive = int(np.searchsorted(cycles, d, side="left"))
+            if alive == 0:
+                return
+            cycles = cycles[:alive]
         self._execute_batch(cid, core, cfg, st, img, cycles)
         core.next_free = int(cycles[-1]) + 1
         if st.counter >= core.total:
@@ -1571,30 +1771,47 @@ class _EventEngine:
 
         def open_streams(spec: SendSpec, kind, locs, payload, arrive,
                          iter_idx):
-            n_targets = len(spec.dst_cores) + (1 if spec.to_gmem else 0)
-            per_it = n_targets * payload.shape[1] * payload.itemsize
             row_bytes = payload.shape[1] * payload.itemsize
-            if iter_idx is None:             # every iteration sends one row
-                msgs_it[...] += n_targets
-                bytes_it[...] += per_it
-            else:
-                msgs_it[iter_idx] += n_targets
-                bytes_it[iter_idx] += per_it
-            for dst in spec.dst_cores:
-                link, key = self.sim._link_for(cid, dst)
-                arr = arrive
-                if link is not None:         # cross-chip: link-delayed rows
-                    arr = np.asarray(arrive) + link.transfer_delay(row_bytes)
-                    self.log_link.append(
-                        (key, np.asarray(arrive) - 1, row_bytes,
-                         Simulator._occupancy(link, row_bytes)))
-                self._push(int(arr[0]), _PH_DELIVER, 0, "stream",
-                           _Stream(dst, img, spec.value, kind, locs, payload,
-                                   arr))
+            arrive = np.asarray(arrive)
+            # per-row message count: a row dropped by a down link (fault
+            # injection) is not sent, so it counts toward nothing — exactly
+            # the reference's emit() skip
+            row_msgs = np.zeros(len(arrive), np.int64)
             if spec.to_gmem:
+                row_msgs += 1
                 self._push(int(arrive[0]), _PH_DELIVER, 0, "stream",
                            _Stream(-1, img, spec.value, kind, locs, payload,
                                    arrive))
+            for dst in spec.dst_cores:
+                link, key = self.sim._link_for(cid, dst)
+                if link is None:             # intra-chip: next-cycle rows
+                    row_msgs += 1
+                    self._push(int(arrive[0]), _PH_DELIVER, 0, "stream",
+                               _Stream(dst, img, spec.value, kind, locs,
+                                       payload, arrive))
+                    continue
+                # cross-chip: the fault state at each row's SEND cycle
+                # governs it; send cycles are non-decreasing and faults only
+                # degrade, so rows split into contiguous timeline segments
+                send = arrive - 1
+                for sl_, down, eff in self._link_segments(key, link, send):
+                    if down:
+                        continue
+                    row_msgs[sl_] += 1
+                    arr = arrive[sl_] + eff.transfer_delay(row_bytes)
+                    self.log_link.append(
+                        (key, send[sl_], row_bytes,
+                         Simulator._occupancy(eff, row_bytes)))
+                    self._push(int(arr[0]), _PH_DELIVER, 0, "stream",
+                               _Stream(dst, img, spec.value, kind,
+                                       locs if locs is None else locs[sl_],
+                                       payload[sl_], arr))
+            if iter_idx is None:             # row i belongs to iteration i
+                msgs_it[...] += row_msgs
+                bytes_it[...] += row_msgs * row_bytes
+            else:
+                msgs_it[iter_idx] += row_msgs
+                bytes_it[iter_idx] += row_msgs * row_bytes
 
         for spec in cfg.sends:
             if spec.write.kind == "pixel" and spec.value in env:

@@ -17,3 +17,5 @@ __all__ = [
     "ClosedLoopClients", "poisson_arrivals", "rate_sweep",
     "uniform_arrivals",
 ]
+# fault injection + recovery live in repro.faults (FaultSchedule,
+# RetryPolicy, remap_program); CmServer takes them via faults=/retry=.

@@ -28,8 +28,11 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.compiler import TenantPlacement
+from repro.core.hwspec import ChipMesh
 from repro.core.lowering import AcceleratorProgram
-from repro.core.simulator import SimStats, Simulator
+from repro.core.mapping import MappingError
+from repro.core.partition import PartitionError
+from repro.core.simulator import LinkStats, SimStats, Simulator
 from repro.serve.scheduler import Request
 
 from .workload import rate_sweep
@@ -50,10 +53,19 @@ class CmRequest(Request):
     arrival: int = 0
     tenant: int = 0
     priority: int = 0
+    deadline: Optional[int] = None   # cycles after arrival; None = server's
     # filled by the server:
     gcu_start: Optional[int] = None
     completion: Optional[int] = None
     output: Optional[Dict[str, np.ndarray]] = None
+    # fault handling (filled by the server):
+    failed: bool = False             # final verdict after any retries
+    fail_cycle: Optional[int] = None   # cycle the last failure was detected
+    attempts: int = 0                # retries consumed (0 = first try only)
+
+    @property
+    def succeeded(self) -> bool:
+        return self.completion is not None and not self.failed
 
     @property
     def queue_cycles(self) -> int:
@@ -70,11 +82,22 @@ class CmRequest(Request):
 
 @dataclasses.dataclass
 class ServeReport:
-    """Per-request timing + the joint ``SimStats`` of one drained run."""
+    """Per-request timing + the joint ``SimStats`` of one drained run.
+
+    Under fault injection latency statistics (``latencies`` /
+    ``percentile`` / ``p50`` / ``p99`` / ``achieved_rate``) cover
+    *successful* requests only — a failed request has no completion, and
+    mixing sentinel values into percentiles would corrupt the curve.
+    Failures are reported separately (``failures``, ``goodput``,
+    ``n_retries``, ``remap_events``).
+    """
 
     requests: List[CmRequest]
     stats: SimStats
     n_tenants: int = 1
+    n_retries: int = 0               # retry attempts re-admitted, all epochs
+    remap_events: List[Dict] = dataclasses.field(default_factory=list)
+    reprogram_cycles: int = 0        # total crossbar-reprogram penalty paid
 
     def by_rid(self) -> Dict[int, CmRequest]:
         """Requests keyed by rid (``requests`` itself is in arrival order)."""
@@ -85,17 +108,23 @@ class ServeReport:
             return self.requests
         return [r for r in self.requests if r.tenant == tenant]
 
+    def successes(self, tenant: Optional[int] = None) -> List[CmRequest]:
+        return [r for r in self._sel(tenant) if r.succeeded]
+
+    def failures(self, tenant: Optional[int] = None) -> List[CmRequest]:
+        return [r for r in self._sel(tenant) if not r.succeeded]
+
     def latencies(self, tenant: Optional[int] = None) -> np.ndarray:
-        return np.array([r.latency_cycles for r in self._sel(tenant)],
+        return np.array([r.latency_cycles for r in self.successes(tenant)],
                         np.int64)
 
     def queue_delays(self, tenant: Optional[int] = None) -> np.ndarray:
-        return np.array([r.queue_cycles for r in self._sel(tenant)],
+        return np.array([r.queue_cycles for r in self.successes(tenant)],
                         np.int64)
 
     def percentile(self, p: float, tenant: Optional[int] = None) -> float:
         lat = self.latencies(tenant)
-        if not len(lat):        # tenant saw no traffic this drain window
+        if not len(lat):        # tenant saw no (successful) traffic
             return float("nan")
         return float(np.percentile(lat, p))
 
@@ -114,22 +143,36 @@ class ServeReport:
     @property
     def achieved_rate(self) -> float:
         """Completed images per cycle over the whole run."""
-        return len(self.requests) / max(1, self.stats.cycles)
+        return len(self.successes()) / max(1, self.stats.cycles)
+
+    @property
+    def goodput(self) -> float:
+        """Fraction of requests that ultimately completed (post-retry)."""
+        return len(self.successes()) / max(1, len(self.requests))
 
     def table(self) -> str:
         """Human-readable per-request latency table."""
         lines = [f"{'rid':>4} {'ten':>3} {'pri':>3} {'arrive':>7} "
                  f"{'start':>7} {'done':>7} {'queue':>6} {'svc':>6} "
-                 f"{'latency':>7}"]
+                 f"{'latency':>7} {'try':>3}"]
         for r in self.requests:
-            lines.append(
-                f"{r.rid:>4} {r.tenant:>3} {r.priority:>3} {r.arrival:>7} "
-                f"{r.gcu_start:>7} {r.completion:>7} {r.queue_cycles:>6} "
-                f"{r.service_cycles:>6} {r.latency_cycles:>7}")
+            if r.succeeded:
+                lines.append(
+                    f"{r.rid:>4} {r.tenant:>3} {r.priority:>3} "
+                    f"{r.arrival:>7} {r.gcu_start:>7} {r.completion:>7} "
+                    f"{r.queue_cycles:>6} {r.service_cycles:>6} "
+                    f"{r.latency_cycles:>7} {r.attempts:>3}")
+            else:
+                lines.append(
+                    f"{r.rid:>4} {r.tenant:>3} {r.priority:>3} "
+                    f"{r.arrival:>7} {'-':>7} {'-':>7} {'-':>6} {'-':>6} "
+                    f"FAILED@{r.fail_cycle} {r.attempts:>3}")
         lines.append(
             f"p50={self.p50:.0f}  p99={self.p99:.0f}  "
             f"makespan={self.makespan}  "
-            f"achieved={self.achieved_rate:.5f} img/cycle")
+            f"achieved={self.achieved_rate:.5f} img/cycle  "
+            f"goodput={self.goodput:.2f}  retries={self.n_retries}  "
+            f"remaps={len(self.remap_events)}")
         return "\n".join(lines)
 
 
@@ -157,9 +200,24 @@ class CmServer:
                  policy: str = "fifo",
                  check_raw: bool = False,
                  strict_float_order: bool = True,
-                 max_cycles: int = 5_000_000):
+                 max_cycles: int = 5_000_000,
+                 faults=None,
+                 deadline: Optional[int] = None,
+                 retry=None,
+                 reprogram_cost_cycles: int = 32,
+                 quantizer=None):
         if policy not in ("fifo", "priority"):
             raise ValueError(f"unknown admission policy {policy!r}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 cycles, got {deadline}")
+        if reprogram_cost_cycles < 0:
+            raise ValueError(f"reprogram_cost_cycles must be >= 0, got "
+                             f"{reprogram_cost_cycles}")
+        if faults is not None and deadline is None:
+            raise ValueError(
+                "fault injection needs a deadline: a dead core stalls its "
+                "tenant's stream forever, and the deadline is the failure "
+                "detector (pass deadline=<cycles after arrival>)")
         if isinstance(placement, TenantPlacement):
             self.placement: Optional[TenantPlacement] = placement
             programs: List[AcceleratorProgram] = placement.programs
@@ -176,18 +234,36 @@ class CmServer:
                     raise ValueError("chip= required when no mesh is "
                                      "compiled into the program(s)")
                 chip = meshes[0]
-        self.programs = programs
+        # own copy: fault recovery swaps in remapped tenant programs
+        self.programs = list(programs)
         self.policy = policy
         self.max_inflight = max_inflight
         self.schedule = schedule
         self.max_cycles = max_cycles
-        self.sim = Simulator(programs if len(programs) > 1 else programs[0],
-                             chip, engine=engine,
-                             compute_plane=compute_plane,
-                             check_raw=check_raw,
-                             strict_float_order=strict_float_order)
+        self.faults = faults
+        self.deadline = deadline
+        self.retry = retry
+        self.reprogram_cost_cycles = reprogram_cost_cycles
+        self.quantizer = quantizer
+        self.chip = chip
+        self._engine = engine
+        self._compute_plane = compute_plane
+        self._check_raw = check_raw
+        self._strict_float_order = strict_float_order
+        self.sim = self._build_sim()
         self.pending: List[CmRequest] = []
         self._next_rid = 0
+
+    def _build_sim(self) -> Simulator:
+        """(Re)build the joint simulator from the current tenant programs —
+        called again after a fault-recovery remap swaps one out."""
+        progs = self.programs
+        return Simulator(progs if len(progs) > 1 else progs[0],
+                         self.chip, engine=self._engine,
+                         compute_plane=self._compute_plane,
+                         check_raw=self._check_raw,
+                         strict_float_order=self._strict_float_order,
+                         faults=self.faults)
 
     @property
     def n_tenants(self) -> int:
@@ -220,8 +296,21 @@ class CmServer:
         return self.serve(reqs)
 
     def serve(self, requests: Sequence[CmRequest]) -> ServeReport:
-        """One joint cycle-accurate run of ``requests`` (re-runnable; the
-        server holds no cross-run simulator state)."""
+        """Cycle-accurate serving of ``requests`` (re-runnable; the server
+        holds no cross-run simulator state beyond remapped programs).
+
+        Without faults this is one joint simulator run, exactly as before.
+        With faults + deadlines it becomes an epoch loop: requests still
+        incomplete at their deadline are *failed at that cycle* (the
+        detection point — a dead core stalls its stream, it is never
+        simulated forever), dead cores known by the latest detection are
+        remapped away (``repro.faults.remap_program``, paying
+        ``reprogram_cost_cycles`` per reprogrammed crossbar), and failed
+        requests are re-admitted under the ``RetryPolicy`` backoff on the
+        same absolute cycle timeline.  Each retry epoch simulates only the
+        retried requests — already-completed requests keep their timings
+        from the epoch that completed them.
+        """
         if not requests:
             raise ValueError("no requests to serve")
         rids = [r.rid for r in requests]
@@ -230,22 +319,129 @@ class CmServer:
         # image-index order = FIFO base order (arrival, then rid): the
         # engines' own selection loop handles any dynamic reordering
         ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        images = [r.image for r in ordered]
-        arrivals = [r.arrival for r in ordered]
-        tenants = [r.tenant for r in ordered]
-        priorities = [r.priority for r in ordered] \
-            if self.policy == "priority" else None
-        outputs, stats = self.sim.run(
-            images, schedule=self.schedule, max_cycles=self.max_cycles,
-            arrivals=arrivals, tenants=tenants,
-            max_inflight=self.max_inflight, priorities=priorities)
-        for i, r in enumerate(ordered):
-            r.gcu_start = stats.gcu_start_cycle[i]
-            r.completion = stats.completion_cycle[i]
-            r.output = outputs[i]
-            r.done = True
-        return ServeReport(requests=list(ordered), stats=stats,
-                           n_tenants=self.n_tenants)
+        for r in ordered:                 # re-runnable: reset verdicts
+            r.failed, r.fail_cycle, r.attempts = False, None, 0
+            r.gcu_start = r.completion = r.output = None
+            r.done = False
+        # effective arrival of the *current attempt* (retries re-admit
+        # later); r.arrival stays the original submission cycle so latency
+        # percentiles include queueing + backoff end to end
+        eff = {r.rid: int(r.arrival) for r in ordered}
+        active = ordered
+        merged: Optional[SimStats] = None
+        n_retries = 0
+        remap_events: List[Dict] = []
+        reprogram_total = 0
+        while True:
+            batch = sorted(active, key=lambda r: (eff[r.rid], r.rid))
+            images = [r.image for r in batch]
+            arrivals = [eff[r.rid] for r in batch]
+            tenants = [r.tenant for r in batch]
+            priorities = [r.priority for r in batch] \
+                if self.policy == "priority" else None
+            deadlines = None
+            if self.deadline is not None \
+                    or any(r.deadline is not None for r in batch):
+                deadlines = [
+                    None if (rel := (r.deadline if r.deadline is not None
+                                     else self.deadline)) is None
+                    else eff[r.rid] + rel
+                    for r in batch]
+            outputs, stats = self.sim.run(
+                images, schedule=self.schedule, max_cycles=self.max_cycles,
+                arrivals=arrivals, tenants=tenants,
+                max_inflight=self.max_inflight, priorities=priorities,
+                deadlines=deadlines)
+            merged = stats if merged is None else _merge_stats(merged, stats)
+            failed_now = []
+            for i, r in enumerate(batch):
+                if i in stats.failed_cycle:
+                    r.failed = True
+                    r.fail_cycle = stats.failed_cycle[i]
+                    r.gcu_start = stats.gcu_start_cycle.get(i)
+                    r.completion = None
+                    r.output = None
+                    failed_now.append(r)
+                else:
+                    r.failed = False
+                    r.gcu_start = stats.gcu_start_cycle[i]
+                    r.completion = stats.completion_cycle[i]
+                    r.output = outputs[i]
+                    r.done = True
+            if not failed_now:
+                break
+            # failure detection: the deadline cycle is when the server can
+            # *know* — recovery decisions use only cores dead by then
+            detect = max(r.fail_cycle for r in failed_now)
+            ready, paid = self._recover(detect, remap_events)
+            reprogram_total += paid
+            retry_batch = []
+            if self.retry is not None:
+                for r in failed_now:
+                    if r.attempts >= self.retry.max_retries:
+                        continue
+                    r.attempts += 1
+                    eff[r.rid] = max(
+                        r.fail_cycle + self.retry.backoff(r.attempts), ready)
+                    retry_batch.append(r)
+                n_retries += len(retry_batch)
+            if not retry_batch:
+                break
+            active = retry_batch
+        return ServeReport(requests=list(ordered), stats=merged,
+                           n_tenants=self.n_tenants,
+                           n_retries=n_retries,
+                           remap_events=remap_events,
+                           reprogram_cycles=reprogram_total)
+
+    def _recover(self, detect: int, remap_events: List[Dict]):
+        """Remap every tenant whose current program touches a core known
+        dead at ``detect``.  Returns ``(ready, paid)``: the cycle remapped
+        hardware is usable (detection + 1 + the serialized crossbar
+        reprogramming penalty) and the penalty itself.  A tenant whose
+        remap is infeasible (no spare capacity) keeps its program; the
+        failure is recorded and its retries burn out against max_retries.
+        """
+        ready = detect + 1
+        paid = 0
+        if self.faults is None:
+            return ready, paid
+        dead = self.faults.dead_cores(by_cycle=detect)
+        if not dead:
+            return ready, paid
+        from repro.faults.recovery import remap_program
+        mesh = self.chip if isinstance(self.chip, ChipMesh) else None
+        chip = None if mesh is not None else self.chip
+        rebuilt = False
+        for t, prog in enumerate(self.programs):
+            hit = sorted(set(prog.cores) & dead)
+            if not hit:
+                continue
+            reserved = set()
+            for u, other in enumerate(self.programs):
+                if u != t:
+                    reserved.update(other.cores)
+            event = {"tenant": t, "cycle": int(detect),
+                     "dead_cores": [int(c) for c in hit]}
+            try:
+                res = remap_program(prog.pgraph.graph, chip=chip, mesh=mesh,
+                                    dead_cores=sorted(dead),
+                                    reserved_cores=sorted(reserved),
+                                    quantizer=self.quantizer)
+            except (MappingError, PartitionError) as e:
+                event.update(ok=False, error=str(e))
+                remap_events.append(event)
+                continue
+            cost = self.reprogram_cost_cycles * res.n_crossbars
+            paid += cost
+            event.update(ok=True, new_cores=[int(c) for c in res.cores],
+                         n_crossbars=res.n_crossbars, reprogram_cycles=cost)
+            remap_events.append(event)
+            self.programs[t] = res.program
+            rebuilt = True
+        if rebuilt:
+            self.sim = self._build_sim()
+        return ready + paid, paid
 
     def serve_images(self, images: Sequence[np.ndarray], arrivals,
                      tenants=None, priorities=None) -> ServeReport:
@@ -257,6 +453,35 @@ class CmServer:
                           tenant=tenants[i], priority=priorities[i])
                 for i in range(n)]
         return self.serve(reqs)
+
+
+def _merge_stats(a: SimStats, b: SimStats) -> SimStats:
+    """Fold a retry epoch's stats into the run total.
+
+    Epochs share one absolute cycle timeline, so ``cycles`` is the max
+    (the later epoch's makespan), traffic/busy counters add, and busy
+    spans / SRAM high-water combine min/max.  The per-image timing dicts
+    are *dropped*: image indices are epoch-local (they would collide), and
+    the ``CmRequest`` objects carry the authoritative per-request timing.
+    """
+    out = SimStats(cycles=max(a.cycles, b.cycles))
+    out.messages = a.messages + b.messages
+    out.bytes_sent = a.bytes_sent + b.bytes_sent
+    for src in (a, b):
+        for c, v in src.busy.items():
+            out.busy[c] += v
+        for c, v in src.sram_high_water.items():
+            out.sram_high_water[c] = max(out.sram_high_water[c], v)
+        for c, v in src.first_busy.items():
+            out.first_busy[c] = min(out.first_busy.get(c, v), v)
+        for c, v in src.last_busy.items():
+            out.last_busy[c] = max(out.last_busy.get(c, v), v)
+        for k, ls in src.links.items():
+            cur = out.links.setdefault(k, LinkStats())
+            cur.messages += ls.messages
+            cur.bytes += ls.bytes
+            cur.busy += ls.busy
+    return out
 
 
 # ------------------------------------------------------------- measurements

@@ -23,9 +23,15 @@ sweeps (each sweep finalizes at least one more round of arrivals).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
+
+
+def _check_rate(rate: float) -> None:
+    # NaN fails every comparison, so `rate <= 0` alone would wave it through
+    if not np.isfinite(rate) or rate <= 0:
+        raise ValueError(f"rate must be a finite value > 0, got {rate}")
 
 
 def poisson_arrivals(n: int, rate: float, seed: int = 0,
@@ -35,8 +41,7 @@ def poisson_arrivals(n: int, rate: float, seed: int = 0,
     Exponential inter-arrival gaps with mean ``1/rate``, accumulated and
     floored to integer cycles (non-decreasing by construction).
     """
-    if rate <= 0:
-        raise ValueError(f"rate must be > 0, got {rate}")
+    _check_rate(rate)
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, n)
     return (start + np.floor(np.cumsum(gaps))).astype(np.int64)
@@ -44,8 +49,7 @@ def poisson_arrivals(n: int, rate: float, seed: int = 0,
 
 def uniform_arrivals(n: int, rate: float, start: int = 0) -> np.ndarray:
     """``n`` evenly spaced arrival cycles at ``rate`` images/cycle."""
-    if rate <= 0:
-        raise ValueError(f"rate must be > 0, got {rate}")
+    _check_rate(rate)
     return (start + np.floor(np.arange(n) / rate)).astype(np.int64)
 
 
@@ -79,6 +83,23 @@ class ClosedLoopClients:
     requests_per_client: int
     think_cycles: int
     start_stagger: int = 0        # client c's first request arrives c*stagger
+    max_sweeps: Optional[int] = None   # default: requests_per_client + 1
+
+    def __post_init__(self):
+        if self.n_clients <= 0:
+            raise ValueError(f"n_clients must be > 0, got {self.n_clients}")
+        if self.requests_per_client <= 0:
+            raise ValueError(f"requests_per_client must be > 0, got "
+                             f"{self.requests_per_client}")
+        if self.think_cycles < 0:
+            raise ValueError(f"think_cycles must be >= 0, got "
+                             f"{self.think_cycles}")
+        if self.start_stagger < 0:
+            raise ValueError(f"start_stagger must be >= 0, got "
+                             f"{self.start_stagger}")
+        if self.max_sweeps is not None and self.max_sweeps < 1:
+            raise ValueError(f"max_sweeps must be >= 1, got "
+                             f"{self.max_sweeps}")
 
     def initial_arrivals(self) -> np.ndarray:
         arr = np.zeros(self.n_clients * self.requests_per_client, np.int64)
@@ -97,7 +118,9 @@ class ClosedLoopClients:
                              f"{len(images)}")
         arrivals = self.initial_arrivals()
         report = None
-        for _ in range(self.requests_per_client + 1):
+        limit = (self.max_sweeps if self.max_sweeps is not None
+                 else self.requests_per_client + 1)
+        for _ in range(limit):
             report = server.serve_images(images, arrivals=arrivals,
                                          tenants=tenants)
             by_rid = report.by_rid()          # rid == client-major index
@@ -110,5 +133,9 @@ class ClosedLoopClients:
             if np.array_equal(nxt, arrivals):
                 return report
             arrivals = nxt
-        raise RuntimeError("closed-loop arrivals did not reach a fixed "
-                           "point — is the admission policy non-FIFO?")
+        raise RuntimeError(
+            f"closed-loop arrivals did not reach a fixed point within "
+            f"{limit} sweeps — under FIFO admission convergence needs at "
+            f"most requests_per_client + 1 = {self.requests_per_client + 1} "
+            f"sweeps, so either the admission policy is non-FIFO or "
+            f"max_sweeps={self.max_sweeps} is set too low")

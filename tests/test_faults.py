@@ -1,0 +1,421 @@
+"""Fault injection + graceful degradation (ISSUE 6).
+
+Contracts under test:
+  * a fault-free ``FaultSchedule`` is bitwise indistinguishable from no
+    schedule at all, in both engines;
+  * under an *active* schedule (core death mid-run + a degraded link) the
+    reference engine stays the bit-identical oracle for the event engine:
+    same failed set, same fail cycles, same counters (cycles / messages /
+    bytes / busy / links), same outputs for every successful image;
+  * deadlines are the failure detector: a dead core's requests fail at a
+    known cycle instead of hanging the simulation;
+  * ``RetryPolicy`` backoff matches a hand oracle, and the server's retry
+    re-admission cycle math is exactly ``max(fail + backoff, ready)``;
+  * recovery remaps around dead cores (the new mapping never touches them)
+    and retried requests complete with outputs bitwise equal to a clean run;
+  * seeded compute-plane faults (``FaultyPlane`` stuck cells/drift,
+    ``NoisyPlane`` Gaussian read noise) are same-seed reproducible, and
+    ``FaultyPlane``'s deterministic perturbation preserves engine equality;
+  * workload validation rejects NaN/non-positive rates, and
+    ``compile_model(..., validate=True)`` names the violated invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (NoisyPlane, NumpyPlane, Simulator, build_fig2_graph,
+                        build_resnet_block_chain, compile_model, make_chip,
+                        make_descriptor, place_tenants)
+from repro.core.compiler import CompileValidationError, validate_program
+from repro.faults import (CoreFault, FaultSchedule, FaultyPlane, LinkFault,
+                          RetryPolicy, remap_program, sample_schedule)
+from repro.runtime import (ClosedLoopClients, CmServer, poisson_arrivals,
+                           uniform_arrivals)
+
+ENGINES = ("reference", "event")
+
+
+def _images(n, shape=(4, 8, 8), seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=shape).astype(np.float32) for _ in range(n)]
+
+
+def _stat_tuple(s):
+    return (s.cycles, s.messages, s.bytes_sent, dict(s.busy),
+            dict(s.first_busy), dict(s.last_busy), dict(s.sram_high_water),
+            dict(s.gcu_start_cycle), dict(s.completion_cycle),
+            dict(s.failed_cycle),
+            {k: (v.messages, v.bytes, v.busy) for k, v in s.links.items()})
+
+
+@pytest.fixture(scope="module")
+def fig2():
+    g = build_fig2_graph()
+    chip = make_chip(4, "all_to_all")
+    return g, chip, compile_model(g, chip)
+
+
+@pytest.fixture(scope="module")
+def mesh2():
+    g = build_resnet_block_chain(4)
+    chip = make_chip(6, "banded")
+    return g, chip, compile_model(g, chip, chips=2)
+
+
+# ------------------------------------------------------------- schedule model
+def test_schedule_validation_and_timeline():
+    with pytest.raises(ValueError):
+        CoreFault(core=0, cycle=-1)
+    with pytest.raises(ValueError):
+        LinkFault(0, 1, cycle=5, latency_add=-1)
+    with pytest.raises(ValueError):
+        LinkFault(0, 1, cycle=5, width_shrink=0)
+    with pytest.raises(ValueError):
+        sample_schedule(4, 100, core_fault_rate=1.5)
+
+    s = FaultSchedule(core_faults=(CoreFault(2, 50), CoreFault(2, 30)),
+                      link_faults=(
+                          LinkFault(0, 1, 40, latency_add=4),
+                          LinkFault(0, 1, 80, down=True)))
+    assert s.dead_at() == {2: 30}          # earliest death wins
+    assert s.dead_cores(by_cycle=29) == frozenset()
+    assert s.dead_cores(by_cycle=30) == frozenset({2})
+
+    from repro.core import LinkSpec
+    base = LinkSpec(latency=4, width_bytes=64)
+    assert s.link_state((0, 1), 39, base) == (False, base)
+    down, spec = s.link_state((0, 1), 40, base)
+    assert not down and spec.latency == 8 and spec.width_bytes == 64
+    down, spec = s.link_state((0, 1), 80, base)
+    assert down                            # down is sticky past 80
+    assert s.link_state((0, 1), 10_000, base)[0]
+
+
+def test_sample_schedule_is_seed_deterministic():
+    a = sample_schedule(8, 500, core_fault_rate=0.5,
+                        links=[(0, 1)], link_fault_rate=1.0, seed=7)
+    b = sample_schedule(8, 500, core_fault_rate=0.5,
+                        links=[(0, 1)], link_fault_rate=1.0, seed=7)
+    assert a == b
+    c = sample_schedule(8, 500, core_fault_rate=0.5,
+                        links=[(0, 1)], link_fault_rate=1.0, seed=8)
+    assert a != c
+
+
+# ----------------------------------------------- empty schedule == no schedule
+@pytest.mark.parametrize("engine", ENGINES)
+def test_empty_schedule_bitwise_equals_no_schedule(fig2, engine):
+    g, chip, prog = fig2
+    imgs = _images(3)
+    o0, s0 = Simulator(prog, chip, engine=engine).run(
+        imgs, schedule="pipelined", arrivals=[0, 10, 20])
+    o1, s1 = Simulator(prog, chip, engine=engine,
+                       faults=FaultSchedule()).run(
+        imgs, schedule="pipelined", arrivals=[0, 10, 20],
+        deadlines=[None, None, None])
+    assert _stat_tuple(s0) == _stat_tuple(s1)
+    for a, b in zip(o0, o1):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+# --------------------------------------------- engine x engine under faults
+def test_engines_bit_identical_under_core_death_and_degraded_link(mesh2):
+    """The acceptance scenario: a core dies mid-run AND an inter-chip link
+    degrades; both engines agree on every counter, the failed set, and the
+    outputs of every successful image."""
+    g, chip, prog = mesh2
+    imgs = _images(4, shape=g.values["x"].shape, seed=1)
+    victim = sorted(prog.cores)[len(prog.cores) // 2]
+    faults = FaultSchedule(
+        core_faults=(CoreFault(victim, 111),),
+        link_faults=(LinkFault(0, 1, 55, latency_add=6, width_shrink=2),))
+    deadlines = [534] * 4
+
+    runs = {}
+    for engine in ENGINES:
+        runs[engine] = Simulator(prog, chip, engine=engine,
+                                 faults=faults).run(
+            imgs, schedule="pipelined", deadlines=deadlines)
+    (o_r, s_r), (o_e, s_e) = runs["reference"], runs["event"]
+    assert _stat_tuple(s_r) == _stat_tuple(s_e)
+    assert s_r.failed_cycle, "the dead core must fail at least one image"
+    for i in range(len(imgs)):
+        if i in s_r.failed_cycle:
+            continue        # failed outputs are outside the contract
+        for k in o_r[i]:
+            np.testing.assert_array_equal(o_r[i][k], o_e[i][k])
+
+
+def test_link_down_drops_messages_identically(mesh2):
+    """A downed link drops (not delays) messages sent after the fault; both
+    engines count the same reduced traffic and the starved images fail."""
+    g, chip, prog = mesh2
+    imgs = _images(2, shape=g.values["x"].shape, seed=3)
+    faults = FaultSchedule(link_faults=(LinkFault(0, 1, 60, down=True),))
+    stats = {}
+    for engine in ENGINES:
+        _, s = Simulator(prog, chip, engine=engine, faults=faults).run(
+            imgs, schedule="pipelined", deadlines=[800, 800])
+        assert s.failed_cycle, "cut pipeline must starve the consumers"
+        healthy = Simulator(prog, chip, engine=engine).run(
+            imgs, schedule="pipelined")[1]
+        assert s.messages < healthy.messages
+        assert s.bytes_sent < healthy.bytes_sent
+        stats[engine] = _stat_tuple(s)
+    assert stats["reference"] == stats["event"]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_core_dead_from_cycle_zero_fails_all_no_hang(fig2, engine):
+    g, chip, prog = fig2
+    victim = prog.mapping[0]               # first partition's core
+    faults = FaultSchedule(core_faults=(CoreFault(victim, 0),))
+    imgs = _images(3)
+    _, s = Simulator(prog, chip, engine=engine, faults=faults).run(
+        imgs, schedule="pipelined", arrivals=[0, 10, 20],
+        deadlines=[200, 210, 220])
+    assert s.failed_cycle == {0: 200, 1: 210, 2: 220}
+    assert not s.completion_cycle
+    assert s.cycles <= 221, "run must end at the last deadline, not hang"
+
+
+def test_faults_validated_against_hardware(fig2):
+    g, chip, prog = fig2
+    with pytest.raises(ValueError):        # core id off-chip
+        Simulator(prog, chip, faults=FaultSchedule(
+            core_faults=(CoreFault(99, 0),)))
+    with pytest.raises(ValueError):        # link faults need a mesh
+        Simulator(prog, chip, faults=FaultSchedule(
+            link_faults=(LinkFault(0, 1, 0, down=True),)))
+
+
+# ------------------------------------------------------------ retry + backoff
+def test_retry_policy_hand_oracle():
+    p = RetryPolicy(max_retries=4, backoff_cycles=10, backoff_factor=3,
+                    max_backoff_cycles=50)
+    assert [p.backoff(a) for a in (1, 2, 3, 4)] == [10, 30, 50, 50]
+    with pytest.raises(ValueError):
+        p.backoff(0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_cycles=100, max_backoff_cycles=10)
+
+
+def test_server_retry_readmission_cycle_math():
+    """The retry arrival is exactly max(fail_cycle + backoff(attempt),
+    hardware_ready); with remap disabled by an unfixable fault the backoff
+    alone drives re-admission, checked against the policy arithmetic."""
+    chip = make_chip(8, "all_to_all")
+    pl = place_tenants([build_fig2_graph()], chip)
+    victim = sorted(pl.programs[0].cores)[1]
+    faults = FaultSchedule(core_faults=(CoreFault(victim, 30),))
+    retry = RetryPolicy(max_retries=2, backoff_cycles=16, backoff_factor=2)
+    srv = CmServer(pl, chip, faults=faults, deadline=250, retry=retry,
+                   reprogram_cost_cycles=40)
+    rep = srv.serve_images(_images(2), arrivals=[0, 10])
+    assert rep.goodput == 1.0 and rep.n_retries == 2
+    [ev] = rep.remap_events
+    assert ev["ok"] and victim in ev["dead_cores"]
+    assert rep.reprogram_cycles == 40 * ev["n_crossbars"]
+    # both requests failed at their deadlines; detection is the latest one
+    detect = 10 + 250
+    ready = detect + 1 + rep.reprogram_cycles
+    # attempt 1 backoff = 16, so both re-admissions were gated by `ready`
+    for r in rep.requests:
+        assert r.attempts == 1
+        assert r.gcu_start >= ready
+        # first-attempt verdict is retained alongside the final success
+        assert r.fail_cycle == r.arrival + 250 and r.succeeded
+
+
+def test_retries_exhaust_then_fail_permanently():
+    chip = make_chip(4, "all_to_all")
+    pl = place_tenants([build_fig2_graph()], chip)
+    # kill every core: remap is impossible, retries must burn out
+    faults = FaultSchedule(core_faults=tuple(
+        CoreFault(c, 0) for c in range(4)))
+    retry = RetryPolicy(max_retries=2, backoff_cycles=8)
+    srv = CmServer(pl, chip, faults=faults, deadline=100, retry=retry)
+    rep = srv.serve_images(_images(2), arrivals=[0, 5])
+    assert rep.goodput == 0.0
+    assert all(r.failed and r.attempts == 2 for r in rep.requests)
+    assert rep.n_retries == 4
+    assert all(not e["ok"] for e in rep.remap_events)
+
+
+def test_fault_injection_requires_deadline():
+    chip = make_chip(4, "all_to_all")
+    pl = place_tenants([build_fig2_graph()], chip)
+    with pytest.raises(ValueError, match="deadline"):
+        CmServer(pl, chip,
+                 faults=FaultSchedule(core_faults=(CoreFault(0, 0),)))
+
+
+# ------------------------------------------------------------------ remapping
+def test_remap_excludes_failed_core_end_to_end():
+    chip = make_chip(8, "all_to_all")
+    pl = place_tenants([build_fig2_graph()], chip)
+    old_cores = set(pl.programs[0].cores)
+    victim = sorted(old_cores)[0]
+    res = remap_program(build_fig2_graph(), chip=chip,
+                        dead_cores=[victim])
+    assert victim not in res.cores
+    assert res.n_crossbars == 2            # fig-2: two conv partitions
+
+    # server-level: after recovery the live program avoids the dead core
+    faults = FaultSchedule(core_faults=(CoreFault(victim, 20),))
+    srv = CmServer(pl, chip, faults=faults, deadline=250,
+                   retry=RetryPolicy(max_retries=1))
+    rep = srv.serve_images(_images(3), arrivals=[0, 10, 20])
+    assert rep.goodput == 1.0
+    assert victim not in set(srv.programs[0].cores)
+    # and the remapped outputs are bitwise the clean answers
+    clean = CmServer(place_tenants([build_fig2_graph()], chip), chip) \
+        .serve_images(_images(3), arrivals=[0, 10, 20])
+    for r, c in zip(rep.requests, clean.requests):
+        for k in c.output:
+            np.testing.assert_array_equal(r.output[k], c.output[k])
+
+
+def test_remap_respects_reserved_cores():
+    chip = make_chip(8, "all_to_all")
+    res = remap_program(build_fig2_graph(), chip=chip,
+                        dead_cores=[0], reserved_cores=[1, 2, 3])
+    assert not (set(res.cores) & {0, 1, 2, 3})
+
+
+# --------------------------------------------------------- compute-plane noise
+def test_noisy_plane_same_seed_bit_reproducible():
+    rng = np.random.default_rng(0)
+    m = rng.normal(size=(16, 16)).astype(np.float32)
+    v = rng.normal(size=16).astype(np.float32)
+    desc = make_descriptor(m, "gemm")
+    a = NoisyPlane(sigma=0.05, seed=42)
+    b = NoisyPlane(sigma=0.05, seed=42)
+    ya = [a.mxv_one(desc, v) for _ in range(3)]
+    yb = [b.mxv_one(desc, v) for _ in range(3)]
+    for x, y in zip(ya, yb):
+        np.testing.assert_array_equal(x, y)
+    # per-call draws: consecutive calls differ (it is read noise)
+    assert not np.array_equal(ya[0], ya[1])
+    # different seed differs
+    yc = NoisyPlane(sigma=0.05, seed=43).mxv_one(desc, v)
+    assert not np.array_equal(ya[0], yc)
+    # sigma=0 is exactly the inner plane
+    y0 = NoisyPlane(sigma=0.0, seed=1).mxv_one(desc, v)
+    np.testing.assert_array_equal(y0, NumpyPlane().mxv_one(desc, v))
+    with pytest.raises(ValueError):
+        NoisyPlane(sigma=-0.1)
+    with pytest.raises(ValueError):
+        NoisyPlane(sigma=float("nan"))
+
+
+def test_faulty_plane_deterministic_and_content_addressed():
+    rng = np.random.default_rng(1)
+    m = rng.normal(size=(12, 20)).astype(np.float32)
+    v = rng.normal(size=20).astype(np.float32)
+    desc = make_descriptor(m, "gemm")
+    a = FaultyPlane(stuck_fraction=0.2, stuck_value=0.0, drift_sigma=0.05,
+                    seed=9)
+    b = FaultyPlane(stuck_fraction=0.2, stuck_value=0.0, drift_sigma=0.05,
+                    seed=9)
+    ya, yb = a.mxv_one(desc, v), b.mxv_one(desc, v)
+    np.testing.assert_array_equal(ya, yb)
+    # unlike read noise, the perturbation is *frozen*: repeat calls agree
+    np.testing.assert_array_equal(ya, a.mxv_one(desc, v))
+    assert not np.array_equal(ya, NumpyPlane().mxv_one(desc, v))
+    with pytest.raises(ValueError):
+        FaultyPlane(stuck_fraction=1.5)
+
+
+@pytest.mark.parametrize("plane_ctor", [
+    lambda: FaultyPlane(stuck_fraction=0.1, drift_sigma=0.02, seed=5)])
+def test_faulty_plane_engines_stay_bit_identical(fig2, plane_ctor):
+    """The frozen perturbation is batch-invariant, so crossbar faults do
+    not break reference/event equality."""
+    g, chip, prog = fig2
+    imgs = _images(2)
+    outs = {}
+    for engine in ENGINES:
+        o, _ = Simulator(prog, chip, engine=engine,
+                         compute_plane=plane_ctor()).run(
+            imgs, schedule="pipelined")
+        outs[engine] = o
+    for a, b in zip(outs["reference"], outs["event"]):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+# ------------------------------------------------------- workload validation
+def test_workload_rate_validation():
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError):
+            poisson_arrivals(4, bad)
+        with pytest.raises(ValueError):
+            uniform_arrivals(4, bad)
+
+
+def test_closed_loop_validation_and_sweep_guard():
+    with pytest.raises(ValueError):
+        ClosedLoopClients(n_clients=0, requests_per_client=2, think_cycles=5)
+    with pytest.raises(ValueError):
+        ClosedLoopClients(n_clients=1, requests_per_client=2,
+                          think_cycles=-1)
+    with pytest.raises(ValueError):
+        ClosedLoopClients(n_clients=1, requests_per_client=2,
+                          think_cycles=5, max_sweeps=0)
+
+    chip = make_chip(4, "all_to_all")
+    prog = compile_model(build_fig2_graph(), chip)
+    srv = CmServer(prog, chip)
+    clients = ClosedLoopClients(n_clients=2, requests_per_client=2,
+                                think_cycles=10, max_sweeps=1)
+    with pytest.raises(RuntimeError, match="max_sweeps"):
+        clients.run(srv, _images(4))
+    # with the default bound the same population converges
+    ok = ClosedLoopClients(n_clients=2, requests_per_client=2,
+                           think_cycles=10)
+    rep = ok.run(srv, _images(4))
+    assert len(rep.requests) == 4
+
+
+# -------------------------------------------------------- compile validation
+def test_compile_validate_passes_on_good_programs(fig2, mesh2):
+    g, chip, _ = fig2
+    compile_model(g, chip, validate=True)
+    gm, chipm, progm = mesh2
+    validate_program(progm)                # mesh program carries its mesh
+
+
+def test_compile_validate_names_violated_invariant(fig2):
+    g, chip, _ = fig2
+    prog = compile_model(g, chip)
+
+    bad = dataclasses.replace(prog, mapping=dict(prog.mapping),
+                              cores={99: next(iter(prog.cores.values()))})
+    with pytest.raises(CompileValidationError) as ei:
+        validate_program(bad, chip)
+    assert ei.value.invariant == "cores-on-chip"
+
+    # cut a link out of the chip: the mapped edge loses its connection
+    narrow = dataclasses.replace(
+        chip, edges=frozenset(e for e in chip.edges
+                              if e != (prog.mapping[0], prog.mapping[1])))
+    with pytest.raises(CompileValidationError) as ei:
+        validate_program(prog, narrow)
+    assert ei.value.invariant == "cut-edge-link"
+
+    tiny = dataclasses.replace(
+        chip, core=dataclasses.replace(chip.core, sram_bytes=8))
+    with pytest.raises(CompileValidationError) as ei:
+        validate_program(prog, tiny)
+    assert ei.value.invariant == "sram-fits"
+
+    with pytest.raises(ValueError):
+        validate_program(prog)             # single-chip needs the chip
