@@ -1,11 +1,18 @@
 """Benchmark 2 (paper §3): compiler cost — partition / Z3-map / lower
-(ISL ``S`` + codegen) breakdown vs network depth and chip size."""
+(ISL ``S`` + codegen) breakdown vs network depth and chip size, plus the
+frontier-table cache axis (ISSUE 7): a deep resnet chain repeats one block
+shape, so the content-addressed LCU cache collapses the ISL lowering cost
+without changing a byte of the generated program."""
 
 from __future__ import annotations
 
 import time
 
-from repro.core import build_resnet_block_chain, make_chip
+import numpy as np
+
+from repro.core import (build_resnet_block_chain, frontier_cache_clear,
+                        frontier_cache_enable, frontier_cache_stats,
+                        make_chip)
 from repro.core.lowering import lower
 from repro.core.mapping import map_partitions
 from repro.core.partition import partition_graph
@@ -13,27 +20,81 @@ from repro.core.partition import partition_graph
 
 def run() -> list:
     rows = []
-    for blocks in (2, 4, 8):
-        graph = build_resnet_block_chain(blocks)
-        n_cores = 2 * blocks + 4
-        chip = make_chip(n_cores, "banded")
+    # depth sweep with the cache OFF so each row times the full ISL work
+    # (with it on, later rows would be warmed by earlier ones)
+    frontier_cache_enable(False)
+    try:
+        for blocks in (2, 4, 8):
+            graph = build_resnet_block_chain(blocks)
+            n_cores = 2 * blocks + 4
+            chip = make_chip(n_cores, "banded")
 
-        t0 = time.perf_counter()
-        pg = partition_graph(graph)
-        t1 = time.perf_counter()
-        mapping = map_partitions(pg, chip)
-        t2 = time.perf_counter()
-        prog = lower(pg, mapping)
-        t3 = time.perf_counter()
+            t0 = time.perf_counter()
+            pg = partition_graph(graph)
+            t1 = time.perf_counter()
+            mapping = map_partitions(pg, chip)
+            t2 = time.perf_counter()
+            prog = lower(pg, mapping)
+            t3 = time.perf_counter()
 
-        n_automata = sum(len(c.lcu) for c in prog.cores.values())
-        rows.append({
-            "bench": "compile", "case": f"resnet{blocks}/{n_cores}c",
-            "partitions": len(pg.partitions),
-            "lcu_automata": n_automata,
-            "partition_ms": round((t1 - t0) * 1e3, 2),
-            "z3_map_ms": round((t2 - t1) * 1e3, 2),
-            "lower_isl_ms": round((t3 - t2) * 1e3, 2),
-            "total_ms": round((t3 - t0) * 1e3, 2),
-        })
+            n_automata = sum(len(c.lcu) for c in prog.cores.values())
+            rows.append({
+                "bench": "compile", "case": f"resnet{blocks}/{n_cores}c",
+                "partitions": len(pg.partitions),
+                "lcu_automata": n_automata,
+                "partition_ms": round((t1 - t0) * 1e3, 2),
+                "z3_map_ms": round((t2 - t1) * 1e3, 2),
+                "lower_isl_ms": round((t3 - t2) * 1e3, 2),
+                "total_ms": round((t3 - t0) * 1e3, 2),
+            })
+    finally:
+        frontier_cache_enable(True)
+    rows.extend(run_cache())
     return rows
+
+
+def run_cache() -> list:
+    """Cold (cache off) vs warm (cache on, cleared — all reuse is
+    within-model) lowering of the repeated-shape resnet8 chain.  The cache
+    must change only wall-clock: generated LCU source and frontier-table
+    ranks are asserted bitwise identical between the two programs."""
+    blocks = 8
+    graph = build_resnet_block_chain(blocks)
+    chip = make_chip(2 * blocks + 4, "banded")
+    pg = partition_graph(graph)
+    mapping = map_partitions(pg, chip)
+
+    frontier_cache_enable(False)
+    try:
+        t0 = time.perf_counter()
+        cold = lower(pg, mapping)
+        cold_ms = (time.perf_counter() - t0) * 1e3
+    finally:
+        frontier_cache_enable(True)
+    frontier_cache_clear()
+    t0 = time.perf_counter()
+    warm = lower(pg, mapping)
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    stats = frontier_cache_stats()
+
+    for cid in cold.cores:
+        a, b = cold.cores[cid], warm.cores[cid]
+        assert set(a.lcu) == set(b.lcu), "cache changed the LCU set"
+        for v in sorted(a.lcu):
+            for da, db in zip(a.lcu[v].deps, b.lcu[v].deps):
+                assert da.gen_src == db.gen_src, \
+                    f"cache changed generated source for {v}"
+                if da.table is None or db.table is None:
+                    assert da.table is None and db.table is None, v
+                else:
+                    assert np.array_equal(da.table.rank, db.table.rank), \
+                        f"cache changed frontier table for {v}"
+
+    return [{
+        "bench": "compile", "case": f"resnet{blocks}/frontier_cache",
+        "cache_hits": stats["hits"],
+        "cache_misses": stats["misses"],
+        "cold_lower_ms": round(cold_ms, 2),
+        "warm_lower_ms": round(warm_ms, 2),
+        "cache_speedup": round(cold_ms / warm_ms, 1),
+    }]

@@ -51,8 +51,9 @@ import sys
 #              too noisy to gate on, too noisy to be identity
 #   identity — every other scalar: matches a row to its baseline row
 EXACT_KEYS = ("cycles", "messages", "makespan", "p50_latency", "p99_latency",
-              "steps", "prefills", "busy_cores")
-EXCLUDED_KEYS = ("tok_per_s", "decode_tok_per_s", "loss_drop")
+              "steps", "prefills", "busy_cores", "pipe_util")
+EXCLUDED_KEYS = ("tok_per_s", "decode_tok_per_s", "loss_drop",
+                 "throughput_per_core")
 
 
 def _is_exact_key(k: str) -> bool:

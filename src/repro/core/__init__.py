@@ -12,11 +12,14 @@ from .graph import (Graph, build_fig2_graph, build_lenet_like,
                     execute_reference)
 from .hwspec import (ChipMesh, ChipSpec, CoreSpec, LinkSpec, make_chip,
                      make_mesh, subchip, submesh)
-from .lowering import InterChipStream
+from .lowering import InterChipStream, LcuDep
 from .mapping import MappingError, map_partitions, map_partitions_mesh
 from .partition import (PartitionError, cut_bytes, partition_chips,
-                        partition_graph)
-from .poly import HAVE_ISL, FrontierTable, compile_frontier_table
+                        partition_graph, plan_replication,
+                        replicate_partitions)
+from .poly import (HAVE_ISL, FrontierTable, compile_frontier_table,
+                   frontier_cache_clear, frontier_cache_enable,
+                   frontier_cache_stats)
 from .simulator import (DeadlockError, LinkStats, RawViolation, SimStats,
                         Simulator)
 
@@ -29,8 +32,10 @@ __all__ = [
     "InterChipStream",
     "MappingError", "map_partitions", "map_partitions_mesh",
     "PartitionError", "cut_bytes", "partition_chips", "partition_graph",
+    "plan_replication", "replicate_partitions", "LcuDep",
     "DeadlockError", "LinkStats", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
+    "frontier_cache_clear", "frontier_cache_enable", "frontier_cache_stats",
     "compile_model", "serialize_config", "TenantPlacement", "place_tenants",
     "CompileValidationError", "validate_program",
     "ComputeDescriptor", "ComputePlane", "DynMatmulDescriptor", "NoisyPlane",

@@ -21,7 +21,8 @@ from .graph import Graph
 from .hwspec import ChipMesh, ChipSpec, make_mesh, subchip, submesh
 from .mapping import MappingError, map_partitions, map_partitions_mesh
 from .lowering import AcceleratorProgram, lower
-from .partition import PartitionError, partition_chips, partition_graph
+from .partition import (PartitionError, partition_chips, partition_graph,
+                        plan_replication, replicate_partitions)
 
 
 class CompileValidationError(Exception):
@@ -30,8 +31,12 @@ class CompileValidationError(Exception):
     ``invariant`` names which one: ``"cores-on-chip"`` (a partition was
     mapped to a core id outside the chip/mesh), ``"cut-edge-link"`` (a
     cross-partition data edge has no interconnect link / mesh link under
-    it), or ``"sram-fits"`` (a core's static SRAM footprint — padded input
-    buffers plus pool accumulators — exceeds the core spec).
+    it), ``"sram-fits"`` (a core's static SRAM footprint — padded input
+    buffers plus pool accumulators — exceeds the core spec), or
+    ``"replica-group"`` (a k-replicated stage violates the replication
+    contract: replicas on distinct cores with identical iteration bounds
+    and residues exactly 0..k-1, every consumer holding one dependency
+    automaton per replica).
     """
 
     def __init__(self, invariant: str, message: str):
@@ -75,36 +80,38 @@ def validate_program(prog: AcceleratorProgram,
     # -1, arrives through GMEM and needs neither)
     for cid, cfg in sorted(prog.cores.items()):
         for v, lc in cfg.lcu.items():
-            if lc.src_partition < 0:
-                continue
-            src = prog.mapping.get(lc.src_partition)
-            if src is None:
-                raise CompileValidationError(
-                    "cut-edge-link",
-                    f"core {cid} input {v!r} from unmapped partition "
-                    f"{lc.src_partition}")
-            if src == cid:
-                continue
-            if mesh is not None:
-                ca, cb = mesh.chip_of(src), mesh.chip_of(cid)
-                if ca != cb:
-                    if (ca, cb) not in mesh.links:
+            for dp in lc.deps:
+                if dp.src_partition < 0:
+                    continue
+                src = prog.mapping.get(dp.src_partition)
+                if src is None:
+                    raise CompileValidationError(
+                        "cut-edge-link",
+                        f"core {cid} input {v!r} from unmapped partition "
+                        f"{dp.src_partition}")
+                if src == cid:
+                    continue
+                if mesh is not None:
+                    ca, cb = mesh.chip_of(src), mesh.chip_of(cid)
+                    if ca != cb:
+                        if (ca, cb) not in mesh.links:
+                            raise CompileValidationError(
+                                "cut-edge-link",
+                                f"edge core {src} -> {cid} ({v!r}) needs "
+                                f"mesh link ({ca}, {cb}) which does not "
+                                f"exist")
+                        continue
+                    la, lb = mesh.local_core(src), mesh.local_core(cid)
+                    if (la, lb) not in mesh.chip.edges:
                         raise CompileValidationError(
                             "cut-edge-link",
-                            f"edge core {src} -> {cid} ({v!r}) needs mesh "
-                            f"link ({ca}, {cb}) which does not exist")
-                    continue
-                la, lb = mesh.local_core(src), mesh.local_core(cid)
-                if (la, lb) not in mesh.chip.edges:
+                            f"edge core {src} -> {cid} ({v!r}) has no "
+                            f"interconnect edge ({la}, {lb}) on chip {ca}")
+                elif (src, cid) not in chip.edges:
                     raise CompileValidationError(
                         "cut-edge-link",
                         f"edge core {src} -> {cid} ({v!r}) has no "
-                        f"interconnect edge ({la}, {lb}) on chip {ca}")
-            elif (src, cid) not in chip.edges:
-                raise CompileValidationError(
-                    "cut-edge-link",
-                    f"edge core {src} -> {cid} ({v!r}) has no interconnect "
-                    f"edge on the chip")
+                        f"interconnect edge on the chip")
 
     # 3. static SRAM high-water fits the core spec: padded float32 input
     # buffers + pool accumulators (what the simulator actually allocates
@@ -128,10 +135,53 @@ def validate_program(prog: AcceleratorProgram,
                 f"core {cid}: static SRAM footprint {need}B > "
                 f"{chip.core.sram_bytes}B spec")
 
+    # 4. replica groups honor the replication contract: k distinct cores,
+    # identical iteration boxes, residues exactly 0..k-1, and every consumer
+    # of the group carries one dependency automaton per replica (the
+    # max-merge over k interleaved producer streams needs all k frontiers)
+    for leader, members in sorted(prog.pgraph.replica_groups.items()):
+        k = len(members)
+        cores = []
+        for p in members:
+            c = prog.mapping.get(p)
+            if c is None or c not in prog.cores:
+                raise CompileValidationError(
+                    "replica-group",
+                    f"replica partition {p} of group {leader} has no core")
+            cores.append(c)
+        if len(set(cores)) != k:
+            raise CompileValidationError(
+                "replica-group",
+                f"group {leader}: replicas share cores {sorted(cores)}")
+        cfgs = [prog.cores[c] for c in cores]
+        if len({c.iter_bounds for c in cfgs}) != 1:
+            raise CompileValidationError(
+                "replica-group",
+                f"group {leader}: replicas disagree on iteration bounds")
+        if (sorted(c.repl_r for c in cfgs) != list(range(k))
+                or any(c.repl_k != k for c in cfgs)):
+            raise CompileValidationError(
+                "replica-group",
+                f"group {leader}: residues "
+                f"{sorted(c.repl_r for c in cfgs)} != 0..{k - 1} "
+                f"or wrong modulus")
+        mset = frozenset(members)
+        for cid, cfg in sorted(prog.cores.items()):
+            for v, lc in cfg.lcu.items():
+                hits = sorted(dp.src_partition for dp in lc.deps
+                              if dp.src_partition in mset)
+                if hits and hits != sorted(members):
+                    raise CompileValidationError(
+                        "replica-group",
+                        f"core {cid} input {v!r} depends on replicas "
+                        f"{hits} of group {leader}, expected all of "
+                        f"{sorted(members)}")
+
 
 def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
                   chips: int = 1, mesh: ChipMesh = None,
-                  validate: bool = False) -> AcceleratorProgram:
+                  validate: bool = False,
+                  replicate=None) -> AcceleratorProgram:
     """End-to-end compilation, optionally scaled out to a multi-chip mesh.
 
     ``chips=1`` (default) is the paper's single-chip flow, unchanged.
@@ -146,10 +196,24 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
     ``validate=True`` runs :func:`validate_program` on the result — the
     post-mapping invariant checker that fails fast, by name, instead of
     deep inside a simulation.
+
+    ``replicate`` turns on bottleneck-stage replication (ISSUE 7):
+    ``"auto"`` runs :func:`partition.plan_replication` against the target's
+    core budget and GCU stream rate, a ``{node_name: k}`` dict replicates
+    the named stages explicitly (round-robin ``i mod k`` iteration split).
     """
     if mesh is None and chips > 1:
         mesh = make_mesh(chips, chip=chip)
     pg = partition_graph(graph)
+    if replicate:
+        if replicate == "auto":
+            total = mesh.n_cores_total if mesh is not None else chip.n_cores
+            base = mesh.chip if mesh is not None else chip
+            plan = plan_replication(pg, total,
+                                    base.dma_pixels_per_cycle)
+        else:
+            plan = dict(replicate)
+        pg = replicate_partitions(pg, plan)
     if mesh is None:
         mapping = map_partitions(pg, chip)
         prog = lower(pg, mapping, quantizer=quantizer)
@@ -271,6 +335,8 @@ def serialize_config(prog: AcceleratorProgram) -> str:
         cores[str(cid)] = dict(
             partition=cfg.partition_idx,
             iter_bounds=list(cfg.iter_bounds),
+            repl_k=cfg.repl_k,
+            repl_r=cfg.repl_r,
             xbar=(cfg.xbar_node.op if cfg.xbar_node else None),
             xbar_shape=(list(cfg.xbar_matrix.shape)
                         if cfg.xbar_matrix is not None else None),
@@ -278,7 +344,10 @@ def serialize_config(prog: AcceleratorProgram) -> str:
             lcu={v: dict(src_partition=lc.src_partition,
                          pad=lc.pad,
                          shape=list(lc.shape),
-                         s_code=lc.gen_src)
+                         s_code=lc.gen_src,
+                         deps=[dict(src_partition=d.src_partition,
+                                    s_code=d.gen_src)
+                               for d in lc.deps])
                  for v, lc in cfg.lcu.items()},
         )
     bundle = dict(

@@ -26,7 +26,8 @@ from .compute_plane import (ComputeDescriptor, DynMatmulDescriptor,
 from .hwspec import ChipMesh, LinkSpec
 from .poly import isl  # islpy when installed, the finite fisl backend otherwise
 from .graph import ALIAS_OPS, CROSSBAR_OPS, Graph, Node
-from .partition import GCU_PARTITION, PartitionedGraph
+from .partition import (GCU_PARTITION, PartitionedGraph,
+                        partition_iteration_bounds)
 
 Point = Tuple[int, ...]
 
@@ -137,6 +138,27 @@ def broadcast_read_relation(iter_name: str, out_hw: Tuple[int, int],
 
 # ---------------------------------------------------------------- core config
 @dataclasses.dataclass
+class LcuDep:
+    """One dependency automaton: the Appendix-A ``S`` of a single producer
+    partition's writes into this array.  An unreplicated producer yields one
+    ``LcuDep``; a k-replicated producer yields k (the producer's write
+    relation domain-restricted to iterations ``rank == r (mod k)``), and a
+    consumer iteration is admitted only when *every* per-replica frontier
+    says it is safe — which is exactly the max-merge of the k interleaved
+    producer streams."""
+
+    src_partition: int
+    dep: poly.DepInfo
+    gen_src: str                      # generated Python source for S (§3.4)
+    table: Optional[poly.FrontierTable] = None
+
+    def make_frontier(self) -> poly.Frontier:
+        ns: Dict[str, object] = {}
+        exec(compile(self.gen_src, "<lcu>", "exec"), ns)  # noqa: S102
+        return poly.Frontier(self.dep, ns["s_eval"])
+
+
+@dataclasses.dataclass
 class LcuArrayConfig:
     value: str
     src_partition: int
@@ -147,11 +169,31 @@ class LcuArrayConfig:
     # Vectorized LCU: S precompiled over all array locations (built once at
     # lowering time; consumed by the event-driven simulator engine).
     table: Optional[poly.FrontierTable] = None
+    # Authoritative dependency list, one entry per producer partition
+    # (replication fans a single producer out into k entries).  The scalar
+    # fields above mirror ``deps[0]`` for the common unreplicated case.
+    deps: List[LcuDep] = dataclasses.field(default_factory=list)
+
+    # mirror fields proxied into deps[0] on write, so post-construction
+    # monkeypatching (e.g. the deadlock test replacing gen_src/table) stays
+    # visible to the engines, which consult ``deps`` exclusively
+    _MIRROR = frozenset({"src_partition", "dep", "gen_src", "table"})
+
+    def __post_init__(self):
+        if not self.deps:
+            self.deps = [LcuDep(src_partition=self.src_partition,
+                                dep=self.dep, gen_src=self.gen_src,
+                                table=self.table)]
+
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        if name in LcuArrayConfig._MIRROR:
+            deps = self.__dict__.get("deps")
+            if deps:
+                setattr(deps[0], name, value)
 
     def make_frontier(self) -> poly.Frontier:
-        ns: Dict[str, object] = {}
-        exec(compile(self.gen_src, "<lcu>", "exec"), ns)  # noqa: S102
-        return poly.Frontier(self.dep, ns["s_eval"])
+        return self.deps[0].make_frontier()
 
 
 @dataclasses.dataclass
@@ -175,6 +217,10 @@ class CoreConfig:
     sends: List[SendSpec]
     conv_attrs: Dict[str, int] = dataclasses.field(default_factory=dict)
     xbar_input: Optional[str] = None  # value name the crossbar reads
+    # Bottleneck replication (ISSUE 7): this core runs the iterations of its
+    # partition's box with flat rank == repl_r (mod repl_k), in rank order.
+    repl_k: int = 1
+    repl_r: int = 0
     # Compute-plane descriptor (weight matrix + int8 quantization), built at
     # lowering so simulator backends never re-derive per-core state.
     compute: Optional[ComputeDescriptor] = None
@@ -252,11 +298,6 @@ def _resolve_alias(graph: Graph, value: str, aliases: Dict[str, str]) -> str:
     return value
 
 
-def _conv_iter_bounds(graph: Graph, node: Node) -> Tuple[int, int]:
-    _, oh, ow = graph.values[node.outputs[0]].shape
-    return oh, ow
-
-
 def lower(pg: PartitionedGraph, mapping: Dict[int, int],
           quantizer=None, mesh: Optional[ChipMesh] = None
           ) -> AcceleratorProgram:
@@ -293,9 +334,22 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
             else:  # relu/add/layernorm/softmax over 1-D (post-gemm) tensors
                 write_specs[out] = WriteSpec(out, "full", shape)
         elif node.op in ("maxpool2d", "avgpool2d"):
-            write_specs[out] = WriteSpec(out, "pool", shape,
-                                         dict(k=node.attrs["k"],
-                                              stride=node.attrs["stride"]))
+            # Fused pool (input produced in the same partition): pooled
+            # pixel (i, j) finalizes at the *producer-grid* iteration that
+            # completes its window.  Direct pool (input streams in from
+            # another partition — the shape a pool takes when split off a
+            # replicated stage): the partition iterates the pool's own
+            # output grid and each iteration gathers one full window from
+            # SRAM, so the write is an ordinary pixel write.
+            pin = _resolve_alias(graph, node.inputs[0], aliases)
+            direct = (pg.value_part.get(pin, GCU_PARTITION)
+                      != pg.node_part[node.name])
+            if direct:
+                write_specs[out] = WriteSpec(out, "pixel", shape)
+            else:
+                write_specs[out] = WriteSpec(out, "pool", shape,
+                                             dict(k=node.attrs["k"],
+                                                  stride=node.attrs["stride"]))
         elif node.op == "global_avgpool":
             src_shape = graph.values[node.inputs[0]].shape
             write_specs[out] = WriteSpec(out, "reduce", shape,
@@ -313,18 +367,10 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
         core_id = mapping[part.idx]
         xbar = part.crossbar
 
-        # Iteration space.
-        if xbar is not None and xbar.op == "conv2d":
-            bounds = _conv_iter_bounds(graph, xbar)
-            iname = "IT"
-        elif xbar is not None:  # gemm
-            bounds = (1,)
-            iname = "IT"
-        else:
-            first_out = part.nodes[0].outputs[0]
-            shp = graph.values[first_out].shape
-            bounds = tuple(shp[1:]) if len(shp) == 3 else (1,)
-            iname = "IT"
+        # Iteration space (all replicas share the full box; a replica core
+        # walks its rank == repl_r (mod repl_k) stride of it).
+        bounds = partition_iteration_bounds(pg, part)
+        iname = "IT"
 
         # Crossbar programming (paper Listing 1: reshape to (FL, C*FH*FW)).
         xbar_matrix = xbar_bias = None
@@ -403,18 +449,33 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
 
         # ---- LCU: S per input array (Appendix A), with generated evaluator
         # and the precompiled vectorized frontier table (event engine path).
+        # A replicated producer contributes one dependency automaton per
+        # replica: its write relation intersected with the round-robin
+        # filter rank == r (mod k); the consumer's admission is the AND of
+        # all of them.
         lcu: Dict[str, LcuArrayConfig] = {}
         for v, rel in reads.items():
             w1 = write_specs[v].isl_write("WR")
-            dep = poly.compute_dep_info(w1, rel)
-            gen_src, _ = poly.generate_s_evaluator(dep)
-            table = poly.compile_frontier_table(
-                dep, graph.values[v].shape, bounds)
-            lcu[v] = LcuArrayConfig(value=v, src_partition=cross_in[v],
-                                    dep=dep, gen_src=gen_src,
+            src_leader = cross_in[v]
+            deps: List[LcuDep] = []
+            for s in pg.replicas_of(src_leader):
+                sp = (None if s == GCU_PARTITION else pg.partitions[s])
+                if sp is not None and sp.repl_k > 1:
+                    w1_s = poly.restrict_writes_mod(
+                        w1, partition_iteration_bounds(pg, sp),
+                        sp.repl_k, sp.repl_r)
+                else:
+                    w1_s = w1
+                dep, gen_src, table = poly.compile_lcu(
+                    w1_s, rel, graph.values[v].shape, bounds)
+                deps.append(LcuDep(src_partition=s, dep=dep,
+                                   gen_src=gen_src, table=table))
+            lcu[v] = LcuArrayConfig(value=v,
+                                    src_partition=deps[0].src_partition,
+                                    dep=deps[0].dep, gen_src=deps[0].gen_src,
                                     pad=in_pads[v],
                                     shape=graph.values[v].shape,
-                                    table=table)
+                                    table=deps[0].table, deps=deps)
 
         # ---- sends: every value of this partition consumed elsewhere/GMEM
         sends: List[SendSpec] = []
@@ -448,7 +509,7 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
             xbar_node=xbar, xbar_matrix=xbar_matrix, xbar_bias=xbar_bias,
             dpu_nodes=dpu_nodes, lcu=lcu, sends=sends,
             conv_attrs=conv_attrs, xbar_input=xbar_input, compute=compute,
-            dyn_compute=dyn_compute)
+            dyn_compute=dyn_compute, repl_k=part.repl_k, repl_r=part.repl_r)
 
     # ---- GCU config
     if len(graph.inputs) != 1:

@@ -86,7 +86,8 @@ def map_partitions(pg: PartitionedGraph, chip: ChipSpec,
     part_ids = list(range(len(pg.partitions)))
     edges = [(s, d) for (s, d) in pg.edges if s != GCU_PARTITION]
     return _solve_chip(part_ids, edges, chip, timeout_ms,
-                       exclude_cores=exclude_cores)
+                       exclude_cores=exclude_cores,
+                       groups=tuple(pg.replica_groups.values()))
 
 
 def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
@@ -118,8 +119,14 @@ def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
         edges = [(s, d) for (s, d) in pg.edges
                  if s != GCU_PARTITION
                  and chip_assign[s] == c and chip_assign[d] == c]
+        # symmetry breaking only orders the group members that landed on
+        # this chip (the chip-level DP may cut through a replica group —
+        # replicas never communicate, so that is legal)
+        groups = tuple(tuple(m for m in g if chip_assign.get(m) == c)
+                       for g in pg.replica_groups.values())
         local = _solve_chip(parts, edges, mesh.chip, timeout_ms,
-                            exclude_cores=excl_local.get(c, ()))
+                            exclude_cores=excl_local.get(c, ()),
+                            groups=tuple(g for g in groups if len(g) > 1))
         for p, lc in local.items():
             mapping[p] = mesh.global_core(c, lc)
     return mapping
@@ -127,11 +134,15 @@ def map_partitions_mesh(pg: PartitionedGraph, mesh: ChipMesh,
 
 def _solve_chip(part_ids, edges, chip: ChipSpec,
                 timeout_ms: int = 30_000,
-                exclude_cores=()) -> Dict[int, int]:
+                exclude_cores=(), groups=()) -> Dict[int, int]:
     """Place ``part_ids`` on one chip's cores: distinct cores, every edge in
     ``edges`` on an interconnect link.  Z3 when available, else exhaustive
     backtracking (partition graphs are small, so the search is exact).
-    ``exclude_cores`` (dead/reserved cores) never receive a partition."""
+    ``exclude_cores`` (dead/reserved cores) never receive a partition.
+    ``groups`` lists replica groups (tuples of partition ids): members are
+    fully interchangeable — identical edge sets, no intra-group edges — so
+    ordering their core ids breaks the k! placement symmetry without losing
+    satisfiability."""
     n_parts = len(part_ids)
     excluded = frozenset(int(c) for c in exclude_cores)
     avail = chip.n_cores - len(excluded & frozenset(range(chip.n_cores)))
@@ -140,7 +151,7 @@ def _solve_chip(part_ids, edges, chip: ChipSpec,
             f"{n_parts} partitions > {avail} available cores"
             + (f" ({len(excluded)} excluded)" if excluded else ""))
     if not HAVE_Z3:
-        return _map_backtracking(part_ids, edges, chip, excluded)
+        return _map_backtracking(part_ids, edges, chip, excluded, groups)
 
     solver = z3.Solver()
     solver.set("timeout", timeout_ms)
@@ -156,6 +167,9 @@ def _solve_chip(part_ids, edges, chip: ChipSpec,
         solver.add(z3.Or(*[
             z3.And(loc[src] == a, loc[dst] == b) for (a, b) in edge_pairs
         ]))
+    for g in groups:
+        for a, b in zip(g, g[1:]):
+            solver.add(loc[a] < loc[b])
 
     if solver.check() != z3.sat:
         raise MappingError(
@@ -167,9 +181,11 @@ def _solve_chip(part_ids, edges, chip: ChipSpec,
 
 
 def _map_backtracking(part_ids, edges, chip: ChipSpec,
-                      excluded: frozenset = frozenset()) -> Dict[int, int]:
+                      excluded: frozenset = frozenset(),
+                      groups=()) -> Dict[int, int]:
     """Complete DFS over core assignments with the same constraint set as the
-    Z3 encoding: distinct cores, every partition edge on an interconnect link.
+    Z3 encoding: distinct cores, every partition edge on an interconnect link,
+    replica-group members core-ordered (symmetry breaking).
     No solution found == UNSAT."""
     order = sorted(part_ids)
     # all edges go forward (src < dst, partition.py invariant 2), so when
@@ -177,6 +193,12 @@ def _map_backtracking(part_ids, edges, chip: ChipSpec,
     preds: Dict[int, list] = {p: [] for p in order}
     for (src, dst) in edges:
         preds[dst].append(src)
+    # replica group members are consecutive ascending ids, so the previous
+    # member is always assigned first in the DFS order below
+    prev_in_group: Dict[int, int] = {}
+    for g in groups:
+        for a, b in zip(g, g[1:]):
+            prev_in_group[b] = a
     assign: Dict[int, int] = {}
     used = set()
 
@@ -184,6 +206,9 @@ def _map_backtracking(part_ids, edges, chip: ChipSpec,
         for src in preds[pidx]:
             if src in assign and (assign[src], core) not in chip.edges:
                 return False
+        pv = prev_in_group.get(pidx)
+        if pv is not None and pv in assign and assign[pv] >= core:
+            return False
         return True
 
     def dfs(k: int) -> bool:

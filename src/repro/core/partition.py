@@ -27,12 +27,27 @@ from .hwspec import ChipMesh
 
 GCU_PARTITION = -1  # virtual partition for graph inputs (fed by the GCU)
 
+# DPU ops that read/write exactly their own iteration's pixel — safe to keep
+# inside a replicated stage (every iteration is independent of the others).
+ELEMENTWISE_DPU_OPS = ("relu", "add", "layernorm", "softmax")
+# Windowed reductions that can head a crossbar-less partition in *direct*
+# mode (gather the whole window from SRAM per output iteration) — the form a
+# pool takes when it is split off a replicated producer stage.
+DIRECT_POOL_OPS = ("maxpool2d", "avgpool2d")
+
 
 @dataclasses.dataclass
 class Partition:
     idx: int
     nodes: List[Node] = dataclasses.field(default_factory=list)
     crossbar: Optional[Node] = None
+    # Bottleneck replication (ISSUE 7): ``repl_k`` copies of this stage run
+    # round-robin over the iteration space — this partition executes the
+    # iterations with flat rank == repl_r (mod repl_k).  ``repl_group`` is
+    # the leader partition idx shared by the whole group (None: unreplicated).
+    repl_k: int = 1
+    repl_r: int = 0
+    repl_group: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -44,17 +59,33 @@ class PartitionedGraph:
     # (src partition, dst partition) -> shared value names (paper: edges with
     # the same endpoints are combined into a single shared array)
     edges: Dict[Tuple[int, int], List[str]]
+    # leader partition idx -> all member partition idxs (consecutive)
+    replica_groups: Dict[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
 
     def partition_of_value(self, value: str) -> int:
         return self.value_part[value]
 
+    def leader_of(self, pidx: int) -> int:
+        if pidx == GCU_PARTITION:
+            return pidx
+        g = self.partitions[pidx].repl_group
+        return pidx if g is None else g
+
+    def replicas_of(self, pidx: int) -> Tuple[int, ...]:
+        """All members of ``pidx``'s replica group (``(pidx,)`` when not
+        replicated).  ``pidx`` may be any member; the leader is returned
+        first."""
+        return self.replica_groups.get(self.leader_of(pidx), (pidx,))
+
     def cross_edges_into(self, pidx: int) -> Dict[str, int]:
-        """value name -> src partition, for all cross-partition reads of pidx."""
+        """value name -> src partition (group *leader*), for all
+        cross-partition reads of ``pidx``."""
         out: Dict[str, int] = {}
         for (src, dst), vals in self.edges.items():
             if dst == pidx:
                 for v in vals:
-                    out[v] = src
+                    out[v] = self.leader_of(src)
         return out
 
 
@@ -120,6 +151,282 @@ def partition_graph(graph: Graph) -> PartitionedGraph:
     return PartitionedGraph(graph=graph, partitions=partitions,
                             node_part=node_part, value_part=value_part,
                             edges=edges)
+
+
+# ------------------------------------------------- bottleneck replication pass
+def partition_iteration_bounds(pg: PartitionedGraph, part: Partition):
+    """The iteration-space box a partition's cores sweep (mirrors the bounds
+    logic in ``lowering.lower`` — conv partitions iterate the conv's output
+    grid, gemm partitions run one big iteration, crossbar-less partitions
+    iterate their head node's output pixel grid)."""
+    g = pg.graph
+    if part.crossbar is not None:
+        if part.crossbar.op == "conv2d":
+            _, oh, ow = g.values[part.crossbar.outputs[0]].shape
+            return (oh, ow)
+        return (1,)
+    shp = g.values[part.nodes[0].outputs[0]].shape
+    return tuple(int(x) for x in shp[1:]) if len(shp) == 3 else (1,)
+
+
+def partition_iterations(pg: PartitionedGraph, part: Partition) -> int:
+    n = 1
+    for b in partition_iteration_bounds(pg, part):
+        n *= int(b)
+    return n
+
+
+def _split_for_replication(g: Graph, nodes: List[Node],
+                           crossbar: Optional[Node]):
+    """-> (replica_nodes, tail_nodes).
+
+    The replica prefix is the head (conv2d crossbar, elementwise chain head,
+    or direct-mode pool) plus every following elementwise pixel op — each of
+    its iterations reads and writes only its own pixel, so a round-robin
+    split over iterations is exact.  Anything after that is split into a
+    tail partition, which must be headed by a pool (executed in *direct*
+    mode: it gathers each k x k window from SRAM, fed by the replicas'
+    interleaved pixel streams).  Raises :class:`PartitionError` when the
+    stage has no replicable form.
+    """
+    if crossbar is not None:
+        if crossbar.op != "conv2d":
+            raise PartitionError(
+                f"only conv2d crossbar stages are replicable, not "
+                f"{crossbar.op} ({crossbar.name})")
+        if nodes[0] is not crossbar:
+            raise PartitionError(
+                f"crossbar {crossbar.name} is not the partition head")
+    else:
+        head = nodes[0]
+        shp = g.values[head.outputs[0]].shape
+        if head.op in DIRECT_POOL_OPS:
+            pass  # direct-mode pool: iterates its own output grid
+        elif head.op in ELEMENTWISE_DPU_OPS and len(shp) == 3:
+            pass
+        else:
+            raise PartitionError(
+                f"partition headed by {head.op} ({head.name}) is not "
+                "replicable")
+    repl = [nodes[0]]
+    for n in nodes[1:]:
+        if (n.op in ELEMENTWISE_DPU_OPS
+                and len(g.values[n.outputs[0]].shape) == 3):
+            repl.append(n)
+        else:
+            break
+    tail = nodes[len(repl):]
+    if tail and tail[0].op not in DIRECT_POOL_OPS:
+        raise PartitionError(
+            f"cannot split {tail[0].op} ({tail[0].name}) off a replicated "
+            f"stage: tail partitions must be headed by one of "
+            f"{DIRECT_POOL_OPS}")
+    return repl, tail
+
+
+def _rebuild(g: Graph, partitions: List[Partition],
+             replica_groups: Dict[int, Tuple[int, ...]]) -> PartitionedGraph:
+    """Recompute node/value ownership and edges for an edited partition
+    list.  Replicas share their leader's nodes; ``node_part``/``value_part``
+    point at the leader, while ``edges`` materialize the full replica
+    fan-out (every replica of a producer feeds every replica of a
+    consumer — replicas of the *same* stage never communicate)."""
+    node_part: Dict[str, int] = {}
+    value_part: Dict[str, int] = {v: GCU_PARTITION for v in g.inputs}
+    for p in partitions:
+        if p.repl_group is not None and p.repl_group != p.idx:
+            continue  # non-leader replica: same nodes as the leader
+        for n in p.nodes:
+            node_part[n.name] = p.idx
+            for o in n.outputs:
+                value_part[o] = p.idx
+
+    def members(leader: int) -> Tuple[int, ...]:
+        if leader == GCU_PARTITION:
+            return (GCU_PARTITION,)
+        return replica_groups.get(leader, (leader,))
+
+    edges: Dict[Tuple[int, int], List[str]] = {}
+    for p in partitions:
+        dst_leader = p.repl_group if p.repl_group is not None else p.idx
+        for node in partitions[dst_leader].nodes:
+            for i in node.inputs:
+                if i in g.weights:
+                    continue
+                src_leader = value_part[i]
+                if src_leader == dst_leader:
+                    continue
+                for s in members(src_leader):
+                    edges.setdefault((s, p.idx), [])
+                    if i not in edges[(s, p.idx)]:
+                        edges[(s, p.idx)].append(i)
+
+    for (src, dst) in edges:
+        if src != GCU_PARTITION and src >= dst:
+            raise PartitionError(
+                f"replication produced back edge {src}->{dst}")
+    return PartitionedGraph(graph=g, partitions=partitions,
+                            node_part=node_part, value_part=value_part,
+                            edges=edges, replica_groups=dict(replica_groups))
+
+
+def _replicate_one(pg: PartitionedGraph, pidx: int, k: int,
+                   anchor: Optional[str] = None) -> PartitionedGraph:
+    """Replace partition ``pidx`` with ``k`` round-robin replicas of its
+    replicable prefix (plus a tail partition for the rest, if any).  With
+    ``k == 1`` this is a pure prefix/tail split (identity when there is no
+    tail)."""
+    g = pg.graph
+    old = pg.partitions
+    p = old[pidx]
+    if p.repl_k != 1:
+        raise PartitionError(f"partition {pidx} is already replicated")
+    repl_nodes, tail_nodes = _split_for_replication(g, p.nodes, p.crossbar)
+    if anchor is not None and anchor in {n.name for n in tail_nodes}:
+        # The named stage lives in the tail: split it off unreplicated
+        # first, then replicate the tail partition it lands in.
+        split = _replicate_one(pg, pidx, 1)
+        return _replicate_one(split, split.node_part[anchor], k, anchor)
+    n_iters = partition_iterations(pg, p)
+    if k > n_iters:
+        raise PartitionError(
+            f"cannot replicate partition {pidx} x{k}: only {n_iters} "
+            "iterations")
+
+    shift = (k - 1) + (1 if tail_nodes else 0)
+    parts: List[Partition] = list(old[:pidx])
+    for r in range(k):
+        parts.append(Partition(
+            idx=pidx + r, nodes=list(repl_nodes), crossbar=p.crossbar,
+            repl_k=k, repl_r=r, repl_group=(pidx if k > 1 else None)))
+    if tail_nodes:
+        parts.append(Partition(idx=pidx + k, nodes=list(tail_nodes)))
+    for q in old[pidx + 1:]:
+        parts.append(dataclasses.replace(
+            q, idx=q.idx + shift,
+            repl_group=(None if q.repl_group is None
+                        else q.repl_group + shift)))
+
+    groups: Dict[int, Tuple[int, ...]] = {}
+    for leader, mem in pg.replica_groups.items():
+        if leader > pidx:
+            groups[leader + shift] = tuple(m + shift for m in mem)
+        else:
+            groups[leader] = mem
+    if k > 1:
+        groups[pidx] = tuple(range(pidx, pidx + k))
+    return _rebuild(g, parts, groups)
+
+
+def replicate_partitions(pg: PartitionedGraph,
+                         plan: Dict[str, int]) -> PartitionedGraph:
+    """Apply a replication plan ``{node name: k}``.
+
+    Each entry replicates the partition containing the named node ``k``
+    ways.  Entries are applied one at a time in execution order, re-resolving
+    names between applications — so ``{"conv1": 4, "pool1": 2}`` works even
+    though ``pool1`` starts out fused into ``conv1``'s partition (the first
+    application splits it into a tail partition of its own).  ``k == 1``
+    entries are dropped.
+    """
+    todo = {str(n): int(v) for n, v in plan.items() if int(v) > 1}
+    out = pg
+    while todo:
+        cands = []
+        for name in todo:
+            if name not in out.node_part:
+                raise PartitionError(f"replication plan names unknown or "
+                                     f"non-executable node {name!r}")
+            pidx = out.node_part[name]
+            order = [n.name for n in out.partitions[pidx].nodes].index(name)
+            cands.append((pidx, order, name))
+        _, _, name = min(cands)
+        out = _replicate_one(out, out.node_part[name], todo.pop(name),
+                             anchor=name)
+    return out
+
+
+def _stage_chain(pg: PartitionedGraph, part: Partition):
+    """Decompose a partition into its replicable segments:
+    ``[(anchor node name, n_iters, replicable)]`` — segment 0 is the
+    partition's replica prefix, then the prefix of its tail, and so on.
+    A segment that cannot be split further ends the chain."""
+    g = pg.graph
+    chain = []
+    nodes, crossbar = part.nodes, part.crossbar
+    if crossbar is not None and crossbar.op == "conv2d":
+        _, oh, ow = g.values[crossbar.outputs[0]].shape
+        n0 = oh * ow
+    else:
+        n0 = partition_iterations(pg, part)
+    while nodes:
+        try:
+            repl, tail = _split_for_replication(g, nodes, crossbar)
+        except PartitionError:
+            chain.append((nodes[0].name, n0, False))
+            return chain
+        chain.append((repl[0].name, n0, True))
+        nodes, crossbar = tail, None
+        if nodes:
+            shp = g.values[nodes[0].outputs[0]].shape
+            n0 = 1
+            for x in shp[1:]:
+                n0 *= int(x)
+    return chain
+
+
+def plan_replication(pg: PartitionedGraph, n_cores: int,
+                     dma_pixels_per_cycle: Optional[int] = None
+                     ) -> Dict[str, int]:
+    """Greedy static cost model for ``compile_model(replicate="auto")``.
+
+    Service time of a stage is its iteration count divided by its replica
+    count (one iteration per core per cycle).  Repeatedly replicate the
+    current max-service replicable stage — jumping straight to the smallest
+    ``k`` that lowers its service — until the spare cores run out or the
+    bottleneck hits the input-streaming floor (the GCU feeds
+    ``dma_pixels_per_cycle`` input pixels per cycle; no amount of
+    replication beats that).  Returns a plan for
+    :func:`replicate_partitions`; empty when nothing helps.
+    """
+    g = pg.graph
+    floor = 1
+    if dma_pixels_per_cycle and g.inputs:
+        pixels = 1
+        for x in g.values[g.inputs[0]].shape:
+            pixels *= int(x)
+        floor = max(1, -(-pixels // int(dma_pixels_per_cycle)))
+
+    segs = []  # [anchor, iters, replicable, k, part_key]
+    split_cost = {}  # part_key -> extra cores materialized by first split
+    for p in pg.partitions:
+        chain = _stage_chain(pg, p)
+        split_cost[p.idx] = len(chain) - 1
+        for (anchor, iters, ok) in chain:
+            segs.append([anchor, iters, ok, 1, p.idx])
+
+    cores_used = len(pg.partitions)
+    capped = set()
+    while True:
+        best = None
+        for s in segs:
+            svc = -(-s[1] // s[3])
+            if not s[2] or s[0] in capped or svc <= max(floor, 1):
+                continue
+            if best is None or svc > -(-best[1] // best[3]):
+                best = s
+        if best is None:
+            break
+        anchor, iters, _, k, pkey = best
+        svc = -(-iters // k)
+        k_new = -(-iters // (svc - 1))  # smallest k with a lower service
+        cost = (k_new - k) + split_cost.pop(pkey, 0)
+        if k_new > iters or cores_used + cost > n_cores:
+            capped.add(anchor)
+            continue
+        best[3] = k_new
+        cores_used += cost
+    return {s[0]: s[3] for s in segs if s[3] > 1}
 
 
 # -------------------------------------------------------- multi-chip scale-out

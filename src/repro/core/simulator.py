@@ -139,6 +139,10 @@ class Message:
     kind: str              # pixel | pool | full | reduce
     loc: Point             # unpadded representative location
     payload: np.ndarray
+    # producing partition (-1: GCU).  A consumer of a replicated value keeps
+    # one frontier per producer replica; the write advances only the
+    # matching one.
+    src_part: int = -1
 
 
 @dataclasses.dataclass
@@ -222,7 +226,10 @@ class _CoreImageState:
 
     def __init__(self, cfg: CoreConfig):
         self.sram: Dict[str, np.ndarray] = {}
-        self.frontiers: Dict[str, poly.Frontier] = {}
+        # value -> {src partition -> frontier}: one dependency automaton per
+        # producer (k of them when the producer is k-replicated; admission
+        # requires all of them safe — the max-merge of the k streams)
+        self.frontiers: Dict[str, Dict[int, poly.Frontier]] = {}
         for v, lc in cfg.lcu.items():
             shp = lc.shape
             if len(shp) == 3 and lc.pad:
@@ -231,7 +238,8 @@ class _CoreImageState:
             else:
                 buf = np.zeros(shp, np.float32)
             self.sram[v] = buf
-            self.frontiers[v] = lc.make_frontier()
+            self.frontiers[v] = {d.src_partition: d.make_frontier()
+                                 for d in lc.deps}
         self.pool_acc: Dict[str, np.ndarray] = {}
         self.reduce_acc: Dict[str, np.ndarray] = {}
         self.counter = 0
@@ -610,8 +618,12 @@ class Simulator:
                 st = state(core_id, img)
                 if st.done:
                     continue
-                it = _unflatten(st.counter, cfg.iter_bounds)
-                if not all(fr.safe(it) for fr in st.frontiers.values()):
+                # replica cores walk the rank == repl_r (mod repl_k) stride
+                # of the box; st.counter stays a local index
+                it = _unflatten(st.counter * cfg.repl_k + cfg.repl_r,
+                                cfg.iter_bounds)
+                if not all(fr.safe(it) for frd in st.frontiers.values()
+                           for fr in frd.values()):
                     continue
                 if schedule == "sequential" and not self._producers_done(
                         cfg, img, core_done, gcu_done):
@@ -625,7 +637,9 @@ class Simulator:
                 stats.first_busy.setdefault(core_id, cycle)
                 stats.last_busy[core_id] = cycle
                 st.counter += 1
-                if st.counter >= int(np.prod(cfg.iter_bounds)):
+                total = int(np.prod(cfg.iter_bounds))
+                n_local = (total - cfg.repl_r + cfg.repl_k - 1) // cfg.repl_k
+                if st.counter >= n_local:
                     st.done = True
                     core_done[(core_id, img)] = True
                 progress = True
@@ -664,12 +678,13 @@ class Simulator:
                         gcu_done) -> bool:
         part_core = self.progs[self.tenant_of_core[cfg.core_id]].mapping
         for lc in cfg.lcu.values():
-            src = lc.src_partition
-            if src == -1:
-                if img not in gcu_done:  # GCU must have fully streamed it
+            for dep in lc.deps:
+                src = dep.src_partition
+                if src == -1:
+                    if img not in gcu_done:  # GCU must have fully streamed it
+                        return False
+                elif not core_done[(part_core[src], img)]:
                     return False
-            elif not core_done[(part_core[src], img)]:
-                return False
         return True
 
     def _expected_chunks(self, value: str, tenant: int = 0) -> int:
@@ -703,7 +718,7 @@ class Simulator:
         else:
             _, i, j = m.loc
             buf[:, i + lc.pad, j + lc.pad] = m.payload
-        st.frontiers[m.value].observe(m.loc)
+        st.frontiers[m.value][m.src_part].observe(m.loc)
         if self.check_raw:
             if m.kind in ("full", "reduce"):
                 st.written[m.value].add(())
@@ -809,6 +824,31 @@ class Simulator:
                 env[n.outputs[0]] = np.maximum(pix(n.inputs[0]), 0.0)
             elif n.op == "add":
                 env[n.outputs[0]] = pix(n.inputs[0]) + pix(n.inputs[1])
+            elif n.op in ("maxpool2d", "avgpool2d") and n.inputs[0] in cfg.lcu:
+                # direct mode (pool heads its own partition, input streamed
+                # in — the split-off form of a replicated stage): iteration
+                # (ph, pw) gathers its whole k x k window from SRAM.  The
+                # avg fold runs in the fused path's accumulation order
+                # (row-major over the window, x/(k*k) per add) so the result
+                # is bit-identical to the unreplicated fused pool.
+                out = n.outputs[0]
+                k, s = n.attrs["k"], n.attrs["stride"]
+                lc = cfg.lcu[n.inputs[0]]
+                buf = st.sram[n.inputs[0]]
+                ph, pw = it
+                win = np.ascontiguousarray(
+                    buf[:, ph * s + lc.pad:ph * s + k + lc.pad,
+                        pw * s + lc.pad:pw * s + k + lc.pad])
+                flat = win.reshape(win.shape[0], -1)
+                if n.op == "maxpool2d":
+                    y = flat.max(axis=1)
+                else:
+                    xd = flat / (k * k)
+                    y = np.zeros(win.shape[0], np.float32)
+                    for j in range(k * k):
+                        y += xd[:, j]
+                env[out] = y.astype(np.float32)
+                env_coords[out] = it
             elif n.op in ("maxpool2d", "avgpool2d"):
                 out = n.outputs[0]
                 k, s = n.attrs["k"], n.attrs["stride"]
@@ -897,10 +937,12 @@ class Simulator:
                         ls.bytes += payload.nbytes
                         ls.busy += self._occupancy(link, payload.nbytes)
                 msgs.append(Message(cycle + 1 + delay, dst, img, spec.value,
-                                    kind, loc, payload.copy()))
+                                    kind, loc, payload.copy(),
+                                    src_part=cfg.partition_idx))
             if spec.to_gmem:
                 msgs.append(Message(cycle + 1, -1, img, spec.value, kind,
-                                    loc, payload.copy()))
+                                    loc, payload.copy(),
+                                    src_part=cfg.partition_idx))
 
         for spec in cfg.sends:
             if spec.write.kind == "pixel" and spec.value in env:
@@ -992,7 +1034,8 @@ class _EvState:
 
     def __init__(self, cfg: CoreConfig, check_raw: bool):
         self.sram: Dict[str, np.ndarray] = {}
-        self.frontiers: Dict[str, _TableFrontier] = {}
+        # value -> {src partition -> frontier} (one per producer replica)
+        self.frontiers: Dict[str, Dict[int, _TableFrontier]] = {}
         self.wtime: Dict[str, np.ndarray] = {}
         for v, lc in cfg.lcu.items():
             shp = lc.shape
@@ -1002,10 +1045,13 @@ class _EvState:
             else:
                 buf = np.zeros(shp, np.float32)
             self.sram[v] = buf
-            if lc.table is None:     # config built without lower(): compile
-                lc.table = poly.compile_frontier_table(lc.dep, lc.shape,
-                                                       cfg.iter_bounds)
-            self.frontiers[v] = _TableFrontier(lc.table)
+            frs: Dict[int, _TableFrontier] = {}
+            for dp in lc.deps:
+                if dp.table is None:  # config built without lower(): compile
+                    dp.table = poly.compile_frontier_table(dp.dep, lc.shape,
+                                                           cfg.iter_bounds)
+                frs[dp.src_partition] = _TableFrontier(dp.table)
+            self.frontiers[v] = frs
             if check_raw:
                 if len(shp) == 3:
                     self.wtime[v] = np.full(shp[1:], _INF, np.int64)
@@ -1021,9 +1067,11 @@ class _EvState:
 class _Stream:
     """A batched message flow: rows land one per listed arrival cycle."""
 
-    __slots__ = ("dst", "img", "value", "kind", "locs", "payload", "arrive")
+    __slots__ = ("dst", "img", "value", "kind", "locs", "payload", "arrive",
+                 "src_part")
 
-    def __init__(self, dst, img, value, kind, locs, payload, arrive):
+    def __init__(self, dst, img, value, kind, locs, payload, arrive,
+                 src_part=-1):
         self.dst = dst
         self.img = img
         self.value = value
@@ -1031,21 +1079,27 @@ class _Stream:
         self.locs = locs              # (k, 2) int array or None (full/reduce)
         self.payload = payload        # (k, C) float32
         self.arrive = arrive          # length-k int list, non-decreasing
+        self.src_part = src_part      # producing partition (-1: GCU)
 
 
 class _EvCore:
     __slots__ = ("cfg", "order", "tenant", "total", "pos", "next_free",
-                 "ridx", "p0", "p1", "locs", "win_idx")
+                 "ridx", "p0", "p1", "locs", "win_idx", "rk", "rr")
 
     def __init__(self, cfg: CoreConfig, order: int, tenant: int):
         self.cfg = cfg
         self.order = order
         self.tenant = tenant
-        self.total = int(np.prod(cfg.iter_bounds))
+        self.rk = cfg.repl_k
+        self.rr = cfg.repl_r
         self.pos = 0        # index into the tenant's GCU stream-start order
         self.next_free = 0
-        # The whole iteration space unflattened once; batches slice views.
-        idx = np.arange(self.total)
+        # The core's iteration subsequence (global flat ranks), unflattened
+        # once; batches slice views.  A replica core walks the
+        # rank == repl_r (mod repl_k) stride of the box; ``total`` and all
+        # counters are local indices into ``ridx``.
+        idx = np.arange(self.rr, int(np.prod(cfg.iter_bounds)), self.rk)
+        self.total = len(idx)
         self.ridx = idx
         if len(cfg.iter_bounds) == 2:
             w_b = cfg.iter_bounds[1]
@@ -1099,10 +1153,11 @@ class _EventEngine:
         for cid, cfg in sim.cores_merged.items():
             tk = sim.tenant_of_core[cid]
             for lc in cfg.lcu.values():
-                if lc.src_partition == -1:
-                    self.gcu_consumers[tk].append(cid)
-                else:
-                    self.consumers[(tk, lc.src_partition)].append(cid)
+                for dp in lc.deps:
+                    if dp.src_partition == -1:
+                        self.gcu_consumers[tk].append(cid)
+                    else:
+                        self.consumers[(tk, dp.src_partition)].append(cid)
         self._raw_ops = {cid: self._compile_raw_ops(cfg)
                          for cid, cfg in sim.cores_merged.items()}
         self._pool_tabs: Dict[Tuple[int, str], tuple] = {}
@@ -1472,7 +1527,7 @@ class _EventEngine:
         st = self._state(s.dst, s.img, t)
         lc = cfg.lcu[s.value]
         buf = st.sram[s.value]
-        fr = st.frontiers[s.value]
+        fr = st.frontiers[s.value][s.src_part]
         arrive = np.asarray(s.arrive, np.int64)
         if s.kind in ("full", "reduce"):
             buf[...] = s.payload[0].reshape(buf.shape)
@@ -1505,17 +1560,19 @@ class _EventEngine:
         tk = self.cores[cid].tenant
         g = 0
         for lc in cfg.lcu.values():
-            if lc.src_partition == -1:
-                dc = self.gcu_done_cycle.get(img)
-                if dc is None:
-                    return None
-                g = max(g, dc)
-            else:
-                pc = self.part_core[tk][lc.src_partition]
-                d = self.done_cycle.get((pc, img))
-                if d is None:
-                    return None
-                g = max(g, d if self.cores[pc].order < my_order else d + 1)
+            for dp in lc.deps:
+                if dp.src_partition == -1:
+                    dc = self.gcu_done_cycle.get(img)
+                    if dc is None:
+                        return None
+                    g = max(g, dc)
+                else:
+                    pc = self.part_core[tk][dp.src_partition]
+                    d = self.done_cycle.get((pc, img))
+                    if d is None:
+                        return None
+                    g = max(g, d if self.cores[pc].order < my_order
+                            else d + 1)
         return g
 
     def _core_step(self, t: int, cid: int) -> None:
@@ -1544,11 +1601,14 @@ class _EventEngine:
                 return               # woken again when producers finish
             floor = gate
         limit = _INF
-        for fr in st.frontiers.values():
-            cl = fr.current_limit
-            if cl < limit:
-                limit = cl
-        hi = min(limit, core.total - 1)
+        for frd in st.frontiers.values():
+            for fr in frd.values():
+                cl = fr.current_limit
+                if cl < limit:
+                    limit = cl
+        # ``limit`` is a global-rank bound; the highest admitted *local*
+        # index is floor((limit - rr) / rk) (identity for rk=1, rr=0)
+        hi = min((limit - core.rr) // core.rk, core.total - 1)
         k = hi - st.counter + 1
         if k <= 0:
             return
@@ -1556,9 +1616,10 @@ class _EventEngine:
         # prefix-max so the whole batch is stamped in a few array ops
         ranks = core.ridx[st.counter:st.counter + k]
         unlock = np.full(k, max(floor, core.next_free), np.int64)
-        for fr in st.frontiers.values():
-            if fr.current_limit != _INF or len(fr._chunks_l) > 1:
-                np.maximum(unlock, fr.unlock_vector(ranks), out=unlock)
+        for frd in st.frontiers.values():
+            for fr in frd.values():
+                if fr.current_limit != _INF or len(fr._chunks_l) > 1:
+                    np.maximum(unlock, fr.unlock_vector(ranks), out=unlock)
         rel = self._rel[:k]
         cycles = rel + np.maximum.accumulate(unlock - rel)
         if d is not None:
@@ -1682,6 +1743,34 @@ class _EventEngine:
                 env[n.outputs[0]] = np.maximum(pix(n.inputs[0]), 0.0)
             elif n.op == "add":
                 env[n.outputs[0]] = pix(n.inputs[0]) + pix(n.inputs[1])
+            elif n.op in ("maxpool2d", "avgpool2d") and n.inputs[0] in cfg.lcu:
+                # direct mode (split-off pool stage): each iteration gathers
+                # its whole window from SRAM.  Same gather layout as the
+                # conv window path; the avg fold repeats the fused path's
+                # accumulation order per row (row-major over the window,
+                # x/(k*k) per add) — bit-identical to the reference's direct
+                # pool AND to the unreplicated fused pool.
+                out = n.outputs[0]
+                kk, s_ = n.attrs["k"], n.attrs["stride"]
+                lc = cfg.lcu[n.inputs[0]]
+                buf = st.sram[n.inputs[0]]
+                ch = buf.shape[0]
+                wp = buf.shape[2]
+                base = (pts0 * s_ + lc.pad) * wp + pts1 * s_ + lc.pad
+                off = (np.arange(kk)[:, None] * wp + np.arange(kk)
+                       ).reshape(-1)
+                fi = (base[:, None] + off[None, :]).reshape(-1)
+                g = buf.reshape(ch, -1)[:, fi]
+                W = np.ascontiguousarray(
+                    g.reshape(ch, k, kk * kk).transpose(1, 0, 2))
+                if n.op == "maxpool2d":
+                    y = W.max(axis=2)
+                else:
+                    xd = W / (kk * kk)
+                    y = np.zeros((k, ch), np.float32)
+                    for j in range(kk * kk):
+                        y += xd[:, :, j]
+                env[out] = y.astype(np.float32, copy=False)
             elif n.op in ("maxpool2d", "avgpool2d"):
                 out = n.outputs[0]
                 kk = n.attrs["k"]
@@ -1749,7 +1838,10 @@ class _EventEngine:
                                      ).astype(np.float32, copy=False)
             elif n.op == "matmul":
                 d = dyn_descriptor_for(cfg, n)
-                V = pix(d.a_value)                        # (k, Ca)
+                # contiguous copy: einsum is not bit-stable across input
+                # strides, and pix() rows are strided by the batch size —
+                # which replication changes (the reference path copies too)
+                V = np.ascontiguousarray(pix(d.a_value), np.float32)
                 bbuf = st.sram[d.b_value]
                 dmat = bbuf.reshape(bbuf.shape[0], -1)
                 if d.transpose_b:
@@ -1777,18 +1869,19 @@ class _EventEngine:
             # injection) is not sent, so it counts toward nothing — exactly
             # the reference's emit() skip
             row_msgs = np.zeros(len(arrive), np.int64)
+            src_part = cfg.partition_idx
             if spec.to_gmem:
                 row_msgs += 1
                 self._push(int(arrive[0]), _PH_DELIVER, 0, "stream",
                            _Stream(-1, img, spec.value, kind, locs, payload,
-                                   arrive))
+                                   arrive, src_part))
             for dst in spec.dst_cores:
                 link, key = self.sim._link_for(cid, dst)
                 if link is None:             # intra-chip: next-cycle rows
                     row_msgs += 1
                     self._push(int(arrive[0]), _PH_DELIVER, 0, "stream",
                                _Stream(dst, img, spec.value, kind, locs,
-                                       payload, arrive))
+                                       payload, arrive, src_part))
                     continue
                 # cross-chip: the fault state at each row's SEND cycle
                 # governs it; send cycles are non-decreasing and faults only
@@ -1805,7 +1898,7 @@ class _EventEngine:
                     self._push(int(arr[0]), _PH_DELIVER, 0, "stream",
                                _Stream(dst, img, spec.value, kind,
                                        locs if locs is None else locs[sl_],
-                                       payload[sl_], arr))
+                                       payload[sl_], arr, src_part))
             if iter_idx is None:             # row i belongs to iteration i
                 msgs_it[...] += row_msgs
                 bytes_it[...] += row_msgs * row_bytes

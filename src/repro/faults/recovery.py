@@ -27,7 +27,8 @@ from ..core.hwspec import ChipMesh, ChipSpec, submesh
 from ..core.lowering import AcceleratorProgram, lower
 from ..core.mapping import MappingError, map_partitions, map_partitions_mesh
 from ..core.partition import (PartitionError, partition_chips,
-                              partition_graph)
+                              partition_graph, plan_replication,
+                              replicate_partitions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +85,7 @@ class RemapResult:
 
 def remap_program(graph, chip: ChipSpec = None, mesh: ChipMesh = None,
                   dead_cores=(), reserved_cores=(),
-                  quantizer=None) -> RemapResult:
+                  quantizer=None, replicate=None) -> RemapResult:
     """Re-compile ``graph`` onto the surviving cores.
 
     ``dead_cores`` are failed (global) core ids; ``reserved_cores`` are
@@ -93,17 +94,47 @@ def remap_program(graph, chip: ChipSpec = None, mesh: ChipMesh = None,
     :class:`~repro.core.partition.PartitionError` when no spare capacity
     remains — the caller decides whether that tenant's requests fail
     permanently.
+
+    ``replicate`` carries the tenant's bottleneck-replication request
+    through recovery (same forms as ``compile_model``: ``"auto"`` or
+    ``{node: k}``).  Recompiling re-lowers the round-robin split from
+    scratch, so a dead replica core is simply never placed on again; when
+    the surviving cores cannot host the full replica set, the largest
+    ``k`` is decremented (k-1 round-robin, re-lowered) until the mapping
+    fits — the degraded program remains bitwise value-correct, only
+    slower.  ``"auto"`` re-plans directly against the surviving core
+    budget instead.
     """
     excluded = sorted(set(int(c) for c in dead_cores)
                       | set(int(c) for c in reserved_cores))
-    pg = partition_graph(graph)
-    if mesh is None:
-        if chip is None:
-            raise ValueError("remap_program needs a chip or a mesh")
-        mapping = map_partitions(pg, chip, exclude_cores=excluded)
-        prog = lower(pg, mapping, quantizer=quantizer)
+    base_pg = partition_graph(graph)
+    if replicate == "auto":
+        total = mesh.n_cores_total if mesh is not None else chip.n_cores
+        spec = mesh.chip if mesh is not None else chip
+        plan = plan_replication(base_pg, total - len(excluded),
+                                spec.dma_pixels_per_cycle)
     else:
-        prog = _remap_mesh(pg, mesh, frozenset(excluded), quantizer)
+        plan = dict(replicate) if replicate else {}
+    while True:
+        pg = replicate_partitions(base_pg, plan) if plan else base_pg
+        try:
+            if mesh is None:
+                if chip is None:
+                    raise ValueError("remap_program needs a chip or a mesh")
+                mapping = map_partitions(pg, chip, exclude_cores=excluded)
+                prog = lower(pg, mapping, quantizer=quantizer)
+            else:
+                prog = _remap_mesh(pg, mesh, frozenset(excluded), quantizer)
+            break
+        except (MappingError, PartitionError):
+            live = {n: k for n, k in plan.items() if k > 1}
+            if not live:
+                raise
+            worst = max(live, key=lambda n: (live[n], n))
+            plan = dict(plan)
+            plan[worst] = live[worst] - 1
+            if plan[worst] <= 1:
+                del plan[worst]
     # same post-mapping invariant guard as compile_model(validate=True)
     validate_program(prog, chip if mesh is None else None)
     cores = tuple(sorted(prog.cores))

@@ -419,3 +419,53 @@ def test_compile_validate_names_violated_invariant(fig2):
 
     with pytest.raises(ValueError):
         validate_program(prog)             # single-chip needs the chip
+
+
+def test_remap_dead_replica_core_bitwise_clean():
+    """A replica core dies: remap keeps the full replica group on the
+    survivors and the recovered outputs are bitwise the clean answer."""
+    from repro.core import build_lenet_like, compile_model
+
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    plan = {"conv1": 4}
+    prog = compile_model(g, chip, replicate=plan)
+    # kill the core hosting replica residue 1 (partition index 1)
+    victim = prog.mapping[1]
+    res = remap_program(g, chip=chip, dead_cores=[victim], replicate=plan)
+    assert victim not in res.cores
+    # full replica set survives (8 cores, 1 dead, 7 partitions fit)
+    assert len(res.program.pgraph.replica_groups[0]) == 4
+    validate_program(res.program, chip)
+    rng = np.random.default_rng(7)
+    imgs = [rng.standard_normal((1, 12, 12)).astype(np.float32)
+            for _ in range(3)]
+    clean, _ = Simulator(compile_model(g, chip), chip).run(imgs)
+    for engine in ("event", "reference"):
+        rec, _ = Simulator(res.program, chip, engine=engine).run(imgs)
+        for a, b in zip(clean, rec):
+            for k in a:
+                np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_remap_replica_degrades_to_k_minus_1():
+    """Two dead cores leave no room for k=4 + tail: remap falls back to a
+    re-lowered k=3 round-robin, still bitwise value-correct."""
+    from repro.core import build_lenet_like, compile_model
+
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    res = remap_program(g, chip=chip, dead_cores=[2, 5],
+                        replicate={"conv1": 4})
+    assert not (set(res.cores) & {2, 5})
+    group = res.program.pgraph.replica_groups[0]
+    assert len(group) == 3                 # degraded k-1 round-robin
+    validate_program(res.program, chip)
+    rng = np.random.default_rng(8)
+    imgs = [rng.standard_normal((1, 12, 12)).astype(np.float32)
+            for _ in range(3)]
+    clean, _ = Simulator(compile_model(g, chip), chip).run(imgs)
+    rec, _ = Simulator(res.program, chip).run(imgs)
+    for a, b in zip(clean, rec):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])

@@ -180,3 +180,140 @@ def test_listing2_shape():
     locs = {o for _, o in pairs}
     assert locs == {(c, i, j) for c in range(3) for i in range(3)
                     for j in range(3)}
+
+
+# ------------------------------------------------- replication (i mod k) ----
+# A k-replicated producer executes the strict subsequence of its iteration
+# ranks congruent to r (mod k); its write relation is the full relation
+# domain-restricted to that subsequence (poly.restrict_writes_mod).  The
+# brute-force oracle needs no change: replica r streams its surviving writes
+# in increasing global rank order, exactly what _brute_safe_trace assumes.
+
+def _writer_bounds(W1):
+    """Bounding box of the writer iteration domain (dense by construction)."""
+    its = sorted({i for i, _ in poly.enumerate_map(W1)})
+    nd = len(its[0])
+    return tuple(max(i[d] for i in its) + 1 for d in range(nd))
+
+
+MOD_CASES = [
+    # label, W1 builder, R2 builder, array shape, reader bounds
+    ("conv", lambda: WriteSpec("A", "pixel", (2, 6, 6)).isl_write("WR"),
+     lambda: conv_read_relation("RD", (4, 4), (2, 6, 6), 3, 3, 1, 0),
+     (2, 6, 6), (4, 4)),
+    ("conv_pad", lambda: WriteSpec("A", "pixel", (1, 6, 6)).isl_write("WR"),
+     lambda: conv_read_relation("RD", (6, 6), (1, 6, 6), 3, 3, 1, 1),
+     (1, 6, 6), (6, 6)),
+    ("pointwise", lambda: WriteSpec("A", "pixel", (2, 5, 5)).isl_write("WR"),
+     lambda: pointwise_read_relation("RD", (5, 5), (2, 5, 5)),
+     (2, 5, 5), (5, 5)),
+    ("broadcast", lambda: WriteSpec("A", "pixel", (2, 4, 4)).isl_write("WR"),
+     lambda: full_read_relation("RD", (2, 4, 4)),
+     (2, 4, 4), (1,)),
+]
+
+
+def _check_case_conservative(W1, R2, array_shape, reader_bounds):
+    """Mod-restricted variant of :func:`_check_case`.
+
+    A reader with no dependency on this residue's writes sits inside the
+    dependent-reader domain without being a member; the prefix-frontier
+    machinery admits it only once the preceding dependent reader unlocks —
+    a sound under-approximation of the brute 'deps ⊆ seen' safe set.  The
+    exact contract asserted here: (1) generated code and compiled table
+    agree on every decision, (2) machinery-safe ⊆ oracle-safe at every
+    step, (3) both admit everything once the residue's stream completes.
+    """
+    dep = poly.compute_dep_info(W1, R2)
+    src, fn = poly.generate_s_evaluator(dep)
+    assert "def s_eval(" in src
+    frontier = poly.Frontier(dep, fn)
+    table = poly.compile_frontier_table(dep, array_shape, reader_bounds)
+    bound_rank = -1
+    stream, reader_space, trace = _brute_safe_trace(W1, R2)
+    for step, ((_, locs), safe_now) in enumerate(zip(stream, trace)):
+        for loc in locs:
+            frontier.observe(loc)
+            bound_rank = max(bound_rank, int(table.rank[loc]))
+        if table.never_constrains or bound_rank == table.d_lexmax_rank:
+            limit = 1 << 62
+        else:
+            limit = max(bound_rank, table.d_lexmin_rank - 1)
+        last = step == len(stream) - 1
+        for j in reader_space:
+            got_fr = frontier.safe(j)
+            got_tab = poly.iter_rank(j, reader_bounds) <= limit
+            assert got_fr == got_tab, ("table/codegen split", j)
+            if got_fr:
+                assert j in safe_now, ("unsound admission", j)
+            if last:
+                assert got_fr, ("incomplete at stream end", j)
+
+
+@pytest.mark.parametrize("label,mkw,mkr,shape,rbounds",
+                         MOD_CASES, ids=[c[0] for c in MOD_CASES])
+@pytest.mark.parametrize("k", [2, 3])
+def test_mod_filtered_relation_vs_oracle(label, mkw, mkr, shape, rbounds, k):
+    """Each residue's restricted relation passes the frontier oracle."""
+    W1, R2 = mkw(), mkr()
+    wb = _writer_bounds(W1)
+    for r in range(k):
+        W1r = poly.restrict_writes_mod(W1, wb, k, r)
+        _check_case_conservative(W1r, R2, shape, rbounds)
+
+
+@pytest.mark.parametrize("label,mkw,mkr,shape,rbounds",
+                         MOD_CASES, ids=[c[0] for c in MOD_CASES])
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_mod_residues_partition_writes(label, mkw, mkr, shape, rbounds, k):
+    """The k residue relations exactly partition the full write relation."""
+    W1 = mkw()
+    wb = _writer_bounds(W1)
+    full = set(poly.enumerate_map(W1))
+    parts = [set(poly.enumerate_map(poly.restrict_writes_mod(W1, wb, k, r)))
+             for r in range(k)]
+    assert set().union(*parts) == full
+    for a in range(k):
+        for b in range(a + 1, k):
+            assert not (parts[a] & parts[b])
+    for r, pr in enumerate(parts):
+        assert all(poly.iter_rank(i, wb) % k == r for i, _ in pr)
+
+
+@pytest.mark.parametrize("label,mkw,mkr,shape,rbounds",
+                         MOD_CASES, ids=[c[0] for c in MOD_CASES])
+@pytest.mark.parametrize("k", [2, 3])
+def test_mod_merged_frontiers_sound_and_complete(label, mkw, mkr, shape,
+                                                 rbounds, k):
+    """Max-merge semantics over a global write prefix: a consumer admitted
+    by ALL k per-replica frontiers is admitted by the single unreplicated
+    frontier (soundness — never ahead of the oracle), and once every
+    replica's stream completes the merged admission is total."""
+    W1, R2 = mkw(), mkr()
+    wb = _writer_bounds(W1)
+    dep_full = poly.compute_dep_info(W1, R2)
+    _, fn = poly.generate_s_evaluator(dep_full)
+    full_fr = poly.Frontier(dep_full, fn)
+    reps = []
+    for r in range(k):
+        dep_r = poly.compute_dep_info(
+            poly.restrict_writes_mod(W1, wb, k, r), R2)
+        _, fr_fn = poly.generate_s_evaluator(dep_r)
+        reps.append(poly.Frontier(dep_r, fr_fn))
+    by_iter: dict = {}
+    for i, o in poly.enumerate_map(W1):
+        by_iter.setdefault(i, []).append(o)
+    readers = sorted({j for j, _ in poly.enumerate_map(R2)})
+    order = sorted(by_iter)
+    for step, i in enumerate(order):
+        r = poly.iter_rank(i, wb) % k
+        for o in by_iter[i]:
+            full_fr.observe(o)
+            reps[r].observe(o)
+        last = step == len(order) - 1
+        for j in readers:
+            merged = all(fr.safe(j) for fr in reps)
+            if merged:
+                assert full_fr.safe(j), ("merged admitted early", i, j)
+            if last:
+                assert merged, ("merged incomplete at stream end", j)

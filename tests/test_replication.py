@@ -1,0 +1,212 @@
+"""Bottleneck-stage replication (ISSUE 7).
+
+The replication contract: a k-replicated stage executes iteration rank
+``i`` on replica ``i mod k`` (round-robin), consumers gate each iteration
+on ALL per-replica frontiers, and the result is bitwise the unreplicated
+program's — across engine x compute plane x schedule — with only the
+timing (and therefore pipe utilization) changing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import (CompileValidationError, compile_model,
+                                 validate_program)
+from repro.core.graph import build_lenet_like, build_tiny_transformer
+from repro.core.hwspec import make_chip
+from repro.core.lowering import lower
+from repro.core.mapping import map_partitions
+from repro.core.partition import (GCU_PARTITION, PartitionError,
+                                  partition_graph, partition_iterations,
+                                  plan_replication, replicate_partitions)
+from repro.core.simulator import Simulator
+
+
+def _images(shape, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(shape).astype(np.float32) for _ in range(n)]
+
+
+def _stat_key(st):
+    return (st.cycles, st.messages, st.bytes_sent, dict(st.busy),
+            dict(st.sram_high_water))
+
+
+# ------------------------------------------------------------- partitioning
+def test_replicate_partitions_layout():
+    pg = replicate_partitions(partition_graph(build_lenet_like()),
+                              {"conv1": 4})
+    assert pg.replica_groups == {0: (0, 1, 2, 3)}
+    members = [pg.partitions[i] for i in range(4)]
+    assert [p.repl_r for p in members] == [0, 1, 2, 3]
+    assert all(p.repl_k == 4 for p in members)
+    # replicas share the conv1 node objects; the pool tail follows
+    assert len({id(members[0].nodes[0])} |
+               {id(p.nodes[0]) for p in members}) == 1
+    assert pg.partitions[4].nodes[0].op == "maxpool2d"
+    # no intra-group edges: replicas never communicate
+    for (s, d) in pg.edges:
+        if s != GCU_PARTITION:
+            assert not (pg.partitions[s].repl_group == 0
+                        and pg.partitions[d].repl_group == 0)
+
+
+def test_replicate_k_exceeding_iterations_rejected():
+    pg = partition_graph(build_lenet_like())
+    n = partition_iterations(pg, pg.partitions[0])
+    with pytest.raises(PartitionError):
+        replicate_partitions(pg, {"conv1": n + 1})
+
+
+def test_replicate_unknown_node_rejected():
+    pg = partition_graph(build_lenet_like())
+    with pytest.raises(PartitionError):
+        replicate_partitions(pg, {"nope": 2})
+
+
+def test_plan_replication_targets_bottleneck():
+    pg = partition_graph(build_lenet_like())
+    plan = plan_replication(pg, 8, dma_pixels_per_cycle=4)
+    # conv1 (100 iterations vs 9 and 1 downstream) is the bottleneck
+    assert set(plan) == {"conv1"} and plan["conv1"] > 1
+    # a tight budget yields no plan rather than an infeasible one
+    assert plan_replication(pg, 3, dma_pixels_per_cycle=4) == {}
+
+
+# ------------------------------------------------- bitwise oracle (tentpole)
+@pytest.mark.parametrize("engine", ["event", "reference"])
+@pytest.mark.parametrize("plane", ["numpy", "reference"])
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+def test_replicated_lenet_bitwise_oracle(engine, plane, schedule):
+    """Replicated lenet (k=4) == unreplicated, engine x plane x schedule."""
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    base = compile_model(g, chip)
+    prog = compile_model(g, chip, replicate={"conv1": 4}, validate=True)
+    imgs = _images((1, 12, 12), 3)
+    ob, _ = Simulator(base, chip, engine=engine,
+                      compute_plane=plane).run(imgs, schedule=schedule)
+    orp, _ = Simulator(prog, chip, engine=engine,
+                       compute_plane=plane).run(imgs, schedule=schedule)
+    for a, b in zip(ob, orp):
+        for v in a:
+            assert np.array_equal(a[v], b[v]), v
+
+
+@pytest.mark.parametrize("schedule", ["pipelined", "sequential"])
+def test_replicated_engines_counter_identical(schedule):
+    """Both engines agree on every counter for the replicated program."""
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    prog = compile_model(g, chip, replicate={"conv1": 4})
+    imgs = _images((1, 12, 12), 4)
+    out = {}
+    for engine in ("event", "reference"):
+        o, st = Simulator(prog, chip, engine=engine).run(imgs,
+                                                         schedule=schedule)
+        out[engine] = (o, _stat_key(st))
+    for a, b in zip(out["event"][0], out["reference"][0]):
+        for v in a:
+            assert np.array_equal(a[v], b[v]), v
+    assert out["event"][1] == out["reference"][1]
+
+
+def test_replication_improves_utilization_and_throughput_per_core():
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    imgs = _images((1, 12, 12), 8)
+    _, sb = Simulator(compile_model(g, chip), chip).run(imgs)
+    prog = compile_model(g, chip, replicate={"conv1": 3})
+    _, sr = Simulator(prog, chip).run(imgs)
+    assert sr.mean_utilization() > sb.mean_utilization()
+    # throughput per core: images / (cycles * busy cores)
+    tb = len(imgs) / (sb.cycles * len(sb.busy))
+    tr = len(imgs) / (sr.cycles * len(sr.busy))
+    assert tr > tb
+
+
+def test_replicated_transformer_bitwise():
+    """Broadcast consumer (qk reads all of q_proj) over a replica group."""
+    g = build_tiny_transformer()
+    chip = make_chip(16, "all_to_all")
+    base = compile_model(g, chip)
+    prog = compile_model(g, chip,
+                         replicate={"q_proj": 2, "k_proj": 2, "v_proj": 2},
+                         validate=True)
+    imgs = _images((8, 4, 1), 3)
+    for engine in ("event", "reference"):
+        ob, _ = Simulator(base, chip, engine=engine).run(imgs)
+        orp, _ = Simulator(prog, chip, engine=engine).run(imgs)
+        for a, b in zip(ob, orp):
+            for v in a:
+                assert np.array_equal(a[v], b[v]), (engine, v)
+
+
+def test_direct_pool_replication_bitwise():
+    """A split-off pool stage is itself replicable (direct-mode gather)."""
+    g = build_lenet_like()
+    chip = make_chip(10, "all_to_all")
+    base = compile_model(g, chip)
+    prog = compile_model(g, chip, replicate={"conv1": 4, "pool1": 2},
+                         validate=True)
+    imgs = _images((1, 12, 12), 3)
+    for engine in ("event", "reference"):
+        ob, _ = Simulator(base, chip, engine=engine).run(imgs)
+        orp, _ = Simulator(prog, chip, engine=engine).run(imgs)
+        for a, b in zip(ob, orp):
+            for v in a:
+                assert np.array_equal(a[v], b[v]), (engine, v)
+
+
+def test_auto_replication_end_to_end():
+    """compile_model(replicate="auto") plans against the chip's stream rate
+    and stays bitwise clean."""
+    g = build_lenet_like()
+    chip = make_chip(18, "all_to_all", dma_pixels_per_cycle=16)
+    base = compile_model(g, chip)
+    prog = compile_model(g, chip, replicate="auto", validate=True)
+    assert len(prog.cores) > len(base.cores)
+    imgs = _images((1, 12, 12), 8)
+    ob, sb = Simulator(base, chip).run(imgs)
+    orp, sr = Simulator(prog, chip).run(imgs)
+    for a, b in zip(ob, orp):
+        for v in a:
+            assert np.array_equal(a[v], b[v]), v
+    assert sr.mean_utilization() >= 0.85 > sb.mean_utilization()
+
+
+# ------------------------------------------------------- validate_program
+def test_validate_flags_broken_replica_group():
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    prog = compile_model(g, chip, replicate={"conv1": 4})
+    validate_program(prog, chip)
+    # sabotage: two replicas claim the same residue
+    c0 = prog.mapping[0]
+    saved = prog.cores[c0].repl_r
+    prog.cores[c0].repl_r = 1
+    with pytest.raises(CompileValidationError) as ei:
+        validate_program(prog, chip)
+    assert ei.value.invariant == "replica-group"
+    prog.cores[c0].repl_r = saved
+    # sabotage: a consumer loses one per-replica dependency automaton
+    dst = prog.mapping[4]
+    lc = prog.cores[dst].lcu["relu1:out"]
+    lc.deps = lc.deps[:-1]
+    with pytest.raises(CompileValidationError) as ei:
+        validate_program(prog, chip)
+    assert ei.value.invariant == "replica-group"
+
+
+def test_replica_group_mapping_symmetry_broken():
+    """Replica core ids are strictly increasing (symmetry breaking)."""
+    pg = replicate_partitions(partition_graph(build_lenet_like()),
+                              {"conv1": 4})
+    chip = make_chip(8, "banded", k=7)
+    mapping = map_partitions(pg, chip)
+    cores = [mapping[p] for p in pg.replica_groups[0]]
+    assert cores == sorted(cores)
+    prog = lower(pg, mapping)
+    validate_program(prog, chip)
