@@ -10,9 +10,12 @@ import time
 
 import numpy as np
 
-from repro.core import (build_resnet_block_chain, frontier_cache_clear,
+from repro.analysis import verify_program
+from repro.core import (build_fig2_graph, build_lenet_like,
+                        build_resnet_block_chain, build_tiny_transformer,
+                        compile_model, frontier_cache_clear,
                         frontier_cache_enable, frontier_cache_stats,
-                        make_chip)
+                        make_chip, place_tenants)
 from repro.core.lowering import lower
 from repro.core.mapping import map_partitions
 from repro.core.partition import partition_graph
@@ -36,6 +39,9 @@ def run() -> list:
             t2 = time.perf_counter()
             prog = lower(pg, mapping)
             t3 = time.perf_counter()
+            report = verify_program(prog, chip)
+            t4 = time.perf_counter()
+            assert report.ok and not report.diagnostics, report.summary()
 
             n_automata = sum(len(c.lcu) for c in prog.cores.values())
             rows.append({
@@ -45,11 +51,13 @@ def run() -> list:
                 "partition_ms": round((t1 - t0) * 1e3, 2),
                 "z3_map_ms": round((t2 - t1) * 1e3, 2),
                 "lower_isl_ms": round((t3 - t2) * 1e3, 2),
+                "analyze_ms": round((t4 - t3) * 1e3, 2),
                 "total_ms": round((t3 - t0) * 1e3, 2),
             })
     finally:
         frontier_cache_enable(True)
     rows.extend(run_cache())
+    rows.extend(run_verify())
     return rows
 
 
@@ -98,3 +106,53 @@ def run_cache() -> list:
         "warm_lower_ms": round(warm_ms, 2),
         "cache_speedup": round(cold_ms / warm_ms, 1),
     }]
+
+
+def run_verify() -> list:
+    """Static verifier over the model zoo (ISSUE 8 acceptance row): every
+    zoo model × {plain, replicated, 2-chip mesh} plus a two-tenant
+    placement must verify with ZERO diagnostics — the assert makes a dirty
+    verdict a bench (and CI) failure, and ``verify_ms`` tracks the
+    verifier's wall-clock in the committed baseline.  Rows carry no
+    backend field on purpose: the islpy and fisl CI legs must produce
+    identical verdicts and match the same baseline rows."""
+    chip = make_chip(12, "all_to_all")
+    zoo = [
+        ("lenet", build_lenet_like),
+        ("resnet4", lambda: build_resnet_block_chain(n_blocks=4)),
+        ("tiny_xfmr", build_tiny_transformer),
+    ]
+    rows = []
+    for name, build in zoo:
+        for variant, kw in (("plain", {}),
+                            ("replicated", dict(replicate="auto")),
+                            ("mesh2", dict(chips=2))):
+            prog = compile_model(build(), chip, validate=True, **kw)
+            t0 = time.perf_counter()
+            report = verify_program(prog, None if kw.get("chips") else chip)
+            verify_ms = (time.perf_counter() - t0) * 1e3
+            assert report.ok and not report.diagnostics, \
+                f"{name}/{variant}: {report.summary()}"
+            rows.append({
+                "bench": "compile", "case": f"verify/{name}",
+                "variant": variant,
+                "deps_checked": report.metrics["deps_checked"],
+                "diags": len(report.diagnostics),
+                "verify_ms": round(verify_ms, 2),
+            })
+    placement = place_tenants([build_fig2_graph(), build_lenet_like()], chip)
+    t0 = time.perf_counter()
+    deps = diags = 0
+    for prog in placement.programs:
+        report = verify_program(prog, placement.chip)
+        assert report.ok and not report.diagnostics, report.summary()
+        deps += report.metrics["deps_checked"]
+        diags += len(report.diagnostics)
+    verify_ms = (time.perf_counter() - t0) * 1e3
+    rows.append({
+        "bench": "compile", "case": "verify/tenants",
+        "variant": f"{placement.n_tenants}x",
+        "deps_checked": deps, "diags": diags,
+        "verify_ms": round(verify_ms, 2),
+    })
+    return rows

@@ -1,0 +1,76 @@
+"""Example: statically verify a compiled CM program before simulating it.
+
+The static verifier (``repro.analysis``) proves three families of
+properties over a fully lowered/mapped program, without running a single
+simulated cycle:
+
+  1. dependency soundness — every compiled frontier automaton is checked
+     against the Appendix-A access relations: no read is ever admitted
+     before its writer, replica residues partition each writer domain;
+  2. deadlock freedom — the stage-level wait-for graph is acyclic and
+     every gate lifts by the end of its producer's stream;
+  3. resource bounds — a per-core SRAM high-water upper bound and a
+     per-link offered-load estimate.
+
+Part 1 verifies a clean pipeline and prints the report.  Part 2 corrupts
+one compiled frontier table the way a real compiler bug would (saturating
+its rank entries, so the gate opens after the first write) and shows the
+verifier naming the race statically.  Part 3 shows the one-argument
+integration: ``compile_model(..., analyze=True)``.
+
+Run: PYTHONPATH=src python examples/verified_compile.py
+"""
+
+import dataclasses
+
+from repro.analysis import verify_program
+from repro.core import (CompileValidationError, build_lenet_like, compile_model,
+                        make_chip)
+
+
+def main():
+    chip = make_chip(8, "banded")
+    g = build_lenet_like()
+
+    # ---- part 1: a clean compile verifies with zero diagnostics
+    prog = compile_model(g, chip)
+    report = verify_program(prog, chip)
+    print("clean program:", report.summary())
+    print("  deps checked:           ", report.metrics["deps_checked"])
+    print("  write events replayed:  ", report.metrics["write_events_replayed"])
+    print("  wait-for edges (stages):", report.metrics["wait_edges"],
+          f"({report.metrics['wait_stages']} stages, acyclic)")
+    worst = max(report.metrics["sram_bound_bytes"].items(),
+                key=lambda kv: kv[1])
+    print(f"  SRAM high-water bound:   core {worst[0]}: {worst[1]}B "
+          f"of {chip.core.sram_bytes}B")
+    assert report.ok
+
+    # ---- part 2: corrupt one frontier table -> the race is named, not run
+    prog = compile_model(g, chip)
+    dep = next(d for cfg in prog.cores.values()
+               for lc in cfg.lcu.values() for d in lc.deps
+               if d.table is not None and not d.table.never_constrains)
+    rank = dep.table.rank.copy()
+    rank[rank >= 0] = dep.table.d_lexmax_rank   # "everything ready at once"
+    dep.table = dataclasses.replace(dep.table, rank=rank)
+
+    report = verify_program(prog, chip)
+    print("\ncorrupted table:", report.summary())
+    for d in report.errors()[:3]:
+        print("  ", d)
+    assert not report.ok
+    assert "frontier-unsound" in report.checks()
+
+    # ---- part 3: the compile-time guard raises on the same corruption
+    ok = compile_model(g, chip, analyze=True)
+    print("\ncompile_model(analyze=True) on the clean graph: ok,",
+          len(ok.cores), "cores")
+    try:
+        report.raise_if_errors(CompileValidationError)
+    except CompileValidationError as e:
+        print("raise_if_errors ->", str(e)[:72], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Static program verifier for lowered CM accelerator programs.
+
+Proves, before any simulation: dependency soundness / race freedom (the
+compiled frontier automata never admit a read before its Appendix-A
+writer, and replica residues partition every writer domain exactly),
+deadlock freedom (acyclic stage wait-for graph, every gate lifts by
+stream end, every cross-chip gate has its DMA stream), and static
+resource bounds (per-core SRAM high-water vs. capacity, link offered
+load).  Works against both polyhedral backends — islpy exact and the
+fisl finite fallback — with identical verdicts.
+
+Entry point: :func:`verify_program`.  ``repro.core.compiler`` routes
+``validate_program`` / ``compile_model(..., analyze=True)`` through here.
+"""
+
+from .diagnostics import (AnalysisDiagnostic, AnalysisError, AnalysisReport,
+                          SEVERITIES)
+from .model import build_model
+from .structural import resolve_chip, structural_diagnostics
+from .verifier import ALL_CHECKS, verify_program
+
+__all__ = [
+    "ALL_CHECKS",
+    "AnalysisDiagnostic",
+    "AnalysisError",
+    "AnalysisReport",
+    "SEVERITIES",
+    "build_model",
+    "resolve_chip",
+    "structural_diagnostics",
+    "verify_program",
+]

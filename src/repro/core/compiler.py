@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 from typing import List, Optional, Sequence, Tuple
 
 from .graph import Graph
@@ -23,9 +22,14 @@ from .mapping import MappingError, map_partitions, map_partitions_mesh
 from .lowering import AcceleratorProgram, lower
 from .partition import (PartitionError, partition_chips, partition_graph,
                         plan_replication, replicate_partitions)
+# only the leaf module: ..analysis.diagnostics imports nothing from repro,
+# so this link cannot cycle no matter which package is imported first; the
+# verifier itself (which needs the rest of repro.core) is pulled in lazily
+# by validate_program / compile_model
+from ..analysis.diagnostics import AnalysisError
 
 
-class CompileValidationError(Exception):
+class CompileValidationError(AnalysisError):
     """A compiled program violates a post-mapping invariant.
 
     ``invariant`` names which one: ``"cores-on-chip"`` (a partition was
@@ -37,11 +41,12 @@ class CompileValidationError(Exception):
     contract: replicas on distinct cores with identical iteration bounds
     and residues exactly 0..k-1, every consumer holding one dependency
     automaton per replica).
-    """
 
-    def __init__(self, invariant: str, message: str):
-        super().__init__(f"[{invariant}] {message}")
-        self.invariant = invariant
+    Since the static-verifier refactor this is a thin subclass of
+    :class:`repro.analysis.AnalysisError`; the checks themselves live in
+    :mod:`repro.analysis.structural` and run as part of
+    :func:`repro.analysis.verify_program`.
+    """
 
 
 def validate_program(prog: AcceleratorProgram,
@@ -51,136 +56,23 @@ def validate_program(prog: AcceleratorProgram,
 
     ``chip`` is required for single-chip programs (the program itself only
     records the mesh); mesh programs validate against ``prog.mesh``.
+
+    Backward-compat wrapper over
+    :func:`repro.analysis.structural_diagnostics`: same checks, same order,
+    same messages — first error raises.  For the full static verifier
+    (dependences / progress / resources too) use
+    :func:`repro.analysis.verify_program`.
     """
-    mesh = prog.mesh
-    if chip is None:
-        if mesh is None:
-            raise ValueError("validate_program needs the ChipSpec for "
-                             "single-chip programs")
-        chip = mesh.chip
-    total = mesh.n_cores_total if mesh is not None else chip.n_cores
-
-    # 1. every partition's core exists on its assigned chip
-    for p, c in sorted(prog.mapping.items()):
-        if not 0 <= c < total:
-            raise CompileValidationError(
-                "cores-on-chip",
-                f"partition {p} mapped to core {c} outside [0, {total})")
-        if c not in prog.cores:
-            raise CompileValidationError(
-                "cores-on-chip",
-                f"partition {p} mapped to core {c} with no CoreConfig")
-    for cid in prog.cores:
-        if not 0 <= cid < total:
-            raise CompileValidationError(
-                "cores-on-chip", f"core id {cid} outside [0, {total})")
-
-    # 2. every cut edge rides a link: intra-chip edges need an interconnect
-    # edge, cross-chip edges need a mesh link (GCU input, src_partition
-    # -1, arrives through GMEM and needs neither)
-    for cid, cfg in sorted(prog.cores.items()):
-        for v, lc in cfg.lcu.items():
-            for dp in lc.deps:
-                if dp.src_partition < 0:
-                    continue
-                src = prog.mapping.get(dp.src_partition)
-                if src is None:
-                    raise CompileValidationError(
-                        "cut-edge-link",
-                        f"core {cid} input {v!r} from unmapped partition "
-                        f"{dp.src_partition}")
-                if src == cid:
-                    continue
-                if mesh is not None:
-                    ca, cb = mesh.chip_of(src), mesh.chip_of(cid)
-                    if ca != cb:
-                        if (ca, cb) not in mesh.links:
-                            raise CompileValidationError(
-                                "cut-edge-link",
-                                f"edge core {src} -> {cid} ({v!r}) needs "
-                                f"mesh link ({ca}, {cb}) which does not "
-                                f"exist")
-                        continue
-                    la, lb = mesh.local_core(src), mesh.local_core(cid)
-                    if (la, lb) not in mesh.chip.edges:
-                        raise CompileValidationError(
-                            "cut-edge-link",
-                            f"edge core {src} -> {cid} ({v!r}) has no "
-                            f"interconnect edge ({la}, {lb}) on chip {ca}")
-                elif (src, cid) not in chip.edges:
-                    raise CompileValidationError(
-                        "cut-edge-link",
-                        f"edge core {src} -> {cid} ({v!r}) has no "
-                        f"interconnect edge on the chip")
-
-    # 3. static SRAM high-water fits the core spec: padded float32 input
-    # buffers + pool accumulators (what the simulator actually allocates
-    # per in-flight image)
-    values = prog.pgraph.graph.values
-    for cid, cfg in sorted(prog.cores.items()):
-        need = 0
-        for v, lc in cfg.lcu.items():
-            shp = lc.shape
-            if len(shp) == 3 and lc.pad:
-                c_, h, w = shp
-                need += 4 * c_ * (h + 2 * lc.pad) * (w + 2 * lc.pad)
-            else:
-                need += 4 * math.prod(shp)
-        for n in cfg.dpu_nodes:
-            if n.op in ("maxpool2d", "avgpool2d", "global_avgpool"):
-                need += values[n.outputs[0]].nbytes
-        if need > chip.core.sram_bytes:
-            raise CompileValidationError(
-                "sram-fits",
-                f"core {cid}: static SRAM footprint {need}B > "
-                f"{chip.core.sram_bytes}B spec")
-
-    # 4. replica groups honor the replication contract: k distinct cores,
-    # identical iteration boxes, residues exactly 0..k-1, and every consumer
-    # of the group carries one dependency automaton per replica (the
-    # max-merge over k interleaved producer streams needs all k frontiers)
-    for leader, members in sorted(prog.pgraph.replica_groups.items()):
-        k = len(members)
-        cores = []
-        for p in members:
-            c = prog.mapping.get(p)
-            if c is None or c not in prog.cores:
-                raise CompileValidationError(
-                    "replica-group",
-                    f"replica partition {p} of group {leader} has no core")
-            cores.append(c)
-        if len(set(cores)) != k:
-            raise CompileValidationError(
-                "replica-group",
-                f"group {leader}: replicas share cores {sorted(cores)}")
-        cfgs = [prog.cores[c] for c in cores]
-        if len({c.iter_bounds for c in cfgs}) != 1:
-            raise CompileValidationError(
-                "replica-group",
-                f"group {leader}: replicas disagree on iteration bounds")
-        if (sorted(c.repl_r for c in cfgs) != list(range(k))
-                or any(c.repl_k != k for c in cfgs)):
-            raise CompileValidationError(
-                "replica-group",
-                f"group {leader}: residues "
-                f"{sorted(c.repl_r for c in cfgs)} != 0..{k - 1} "
-                f"or wrong modulus")
-        mset = frozenset(members)
-        for cid, cfg in sorted(prog.cores.items()):
-            for v, lc in cfg.lcu.items():
-                hits = sorted(dp.src_partition for dp in lc.deps
-                              if dp.src_partition in mset)
-                if hits and hits != sorted(members):
-                    raise CompileValidationError(
-                        "replica-group",
-                        f"core {cid} input {v!r} depends on replicas "
-                        f"{hits} of group {leader}, expected all of "
-                        f"{sorted(members)}")
+    from ..analysis import structural_diagnostics
+    diags = structural_diagnostics(prog, chip)
+    for d in diags:
+        if d.severity == "error":
+            raise CompileValidationError(d.check, d.message)
 
 
 def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
                   chips: int = 1, mesh: ChipMesh = None,
-                  validate: bool = False,
+                  validate: bool = False, analyze: bool = False,
                   replicate=None) -> AcceleratorProgram:
     """End-to-end compilation, optionally scaled out to a multi-chip mesh.
 
@@ -195,7 +87,10 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
 
     ``validate=True`` runs :func:`validate_program` on the result — the
     post-mapping invariant checker that fails fast, by name, instead of
-    deep inside a simulation.
+    deep inside a simulation.  ``analyze=True`` runs the full static
+    verifier (:func:`repro.analysis.verify_program`: dependency soundness,
+    deadlock freedom, resource bounds) and raises
+    :class:`CompileValidationError` on any error diagnostic.
 
     ``replicate`` turns on bottleneck-stage replication (ISSUE 7):
     ``"auto"`` runs :func:`partition.plan_replication` against the target's
@@ -221,8 +116,12 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
         chip_assign = partition_chips(pg, mesh)
         mapping = map_partitions_mesh(pg, mesh, chip_assign)
         prog = lower(pg, mapping, quantizer=quantizer, mesh=mesh)
-    if validate:
+    if validate and not analyze:
         validate_program(prog, chip)
+    if analyze:
+        from ..analysis import verify_program
+        report = verify_program(prog, chip)
+        report.raise_if_errors(CompileValidationError)
     return prog
 
 

@@ -333,6 +333,37 @@ class Set:
         pts = _lex_unique_rows(np.concatenate([self.pts, other.pts]))
         return Set(_pts=pts, _name=self.name, _dims=self.dims)
 
+    def _membership(self, other: "Set") -> np.ndarray:
+        """Boolean mask over ``self.pts``: which rows also appear in ``other``.
+
+        Both point lists are lex-sorted, so membership is a searchsorted on
+        the flattened mixed-radix row keys — no Python-level set of tuples.
+        """
+        if not len(self.pts) or not len(other.pts):
+            return np.zeros(len(self.pts), bool)
+        assert self.pts.shape[1] == other.pts.shape[1], "dim mismatch"
+        both = np.concatenate([self.pts, other.pts])
+        lo = both.min(axis=0)
+        span = (both.max(axis=0) - lo + 1).astype(np.int64)
+        radix = np.ones(both.shape[1], np.int64)
+        for d in range(both.shape[1] - 2, -1, -1):
+            radix[d] = radix[d + 1] * span[d + 1]
+        mine = (self.pts - lo) @ radix
+        theirs = np.sort((other.pts - lo) @ radix)
+        pos = np.searchsorted(theirs, mine)
+        pos = np.minimum(pos, len(theirs) - 1)
+        return theirs[pos] == mine
+
+    def subtract(self, other: "Set") -> "Set":
+        """Points of ``self`` not in ``other`` (isl.Set.subtract)."""
+        keep = ~self._membership(other)
+        return Set(_pts=self.pts[keep], _name=self.name, _dims=self.dims)
+
+    def intersect(self, other: "Set") -> "Set":
+        """Points common to both sets (isl.Set.intersect)."""
+        keep = self._membership(other)
+        return Set(_pts=self.pts[keep], _name=self.name, _dims=self.dims)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"fisl.Set({self.name}, {len(self.pts)} pts, dim={self.dim(None)})"
 

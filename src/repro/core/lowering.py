@@ -298,29 +298,28 @@ def _resolve_alias(graph: Graph, value: str, aliases: Dict[str, str]) -> str:
     return value
 
 
-def lower(pg: PartitionedGraph, mapping: Dict[int, int],
-          quantizer=None, mesh: Optional[ChipMesh] = None
-          ) -> AcceleratorProgram:
-    """Produce per-core configurations (paper's 'lowering' step).
-
-    ``quantizer(w) -> w'`` optionally models crossbar programming noise /
-    quantization; identity by default.
-
-    ``mesh``: multi-chip scale-out.  ``mapping`` then holds *global* core
-    ids; cut edges (sends whose destination lives on another chip) are
-    additionally materialized as :class:`InterChipStream` DMA descriptors.
-    The LCU configuration is chip-agnostic by construction — the Appendix-A
-    ``S`` relation only sees array coordinates, so a consumer's frontier
-    table enforces a cross-chip dependency with the same compiled ramp as an
-    intra-chip one.
-    """
-    graph = pg.graph
+def graph_aliases(graph: Graph) -> Dict[str, str]:
+    """Alias chain (flatten/reshape outputs -> their storage value)."""
     aliases: Dict[str, str] = {}
     for node in graph.nodes:
         if node.op in ALIAS_OPS:
             aliases[node.outputs[0]] = node.inputs[0]
+    return aliases
 
-    # ---- write specs: how each cross-partition value gets finalized
+
+def build_write_specs(graph: Graph, pg: PartitionedGraph,
+                      aliases: Optional[Dict[str, str]] = None
+                      ) -> Dict[str, WriteSpec]:
+    """How every value gets finalized, per producer iteration.
+
+    This is the single source of the producer-side access relations: both
+    :func:`lower` and the static verifier (``repro.analysis``) derive the
+    Appendix-A ``W1`` from these specs, so the verifier checks the compiled
+    artifacts against an independently rebuilt relation rather than against
+    whatever the program object happens to carry.
+    """
+    if aliases is None:
+        aliases = graph_aliases(graph)
     write_specs: Dict[str, WriteSpec] = {}
     for v in graph.inputs:
         write_specs[v] = WriteSpec(v, "gcu_stream", graph.values[v].shape)
@@ -361,6 +360,113 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
             pass
         else:
             raise LoweringError(f"no write spec for op {node.op}")
+    return write_specs
+
+
+def partition_conv_attrs(graph: Graph, part) -> Dict[str, int]:
+    """Stride/pad/filter extents of a partition's conv2d crossbar ({} else)."""
+    xbar = part.crossbar
+    if xbar is None or xbar.op != "conv2d":
+        return {}
+    w = graph.weights[xbar.inputs[1]]
+    _, _, fh, fw = w.shape
+    return dict(stride=xbar.attrs["stride"], pad=xbar.attrs["pad"],
+                fh=fh, fw=fw)
+
+
+def partition_read_relations(graph: Graph, pg: PartitionedGraph, part,
+                             bounds: Tuple[int, ...],
+                             aliases: Optional[Dict[str, str]] = None
+                             ) -> Tuple[Dict[str, "isl.Map"], Dict[str, int]]:
+    """Per cross-partition input array: the partition's read relation
+    (unioned over the consuming ops) and the local SRAM padding it needs.
+
+    Shared by :func:`lower` and the static verifier, which rebuilds the
+    reader-side Appendix-A ``R2`` from the graph rather than trusting the
+    lowered program.
+    """
+    if aliases is None:
+        aliases = graph_aliases(graph)
+    conv_attrs = partition_conv_attrs(graph, part)
+    iname = "IT"
+    reads: Dict[str, isl.Map] = {}
+    in_pads: Dict[str, int] = {}
+    cross_in = {_resolve_alias(graph, v, aliases): src
+                for v, src in pg.cross_edges_into(part.idx).items()}
+    for node in part.nodes:
+        if node.op in ALIAS_OPS:
+            continue
+        for pos, raw_in in enumerate(node.inputs):
+            if raw_in in graph.weights:
+                continue
+            v = _resolve_alias(graph, raw_in, aliases)
+            if v not in cross_in:
+                # intra-partition value — except for the broadcast-read
+                # operands, which by the partitioning contract can never
+                # be produced in this partition (matmul/transpose head
+                # their own partition precisely so both operands stream
+                # in through the LCU)
+                if node.op == "transpose" or (
+                        node.op == "matmul" and pos == 1):
+                    raise LoweringError(
+                        f"{node.name}: broadcast operand {v!r} must be "
+                        "cross-partition")
+                continue
+            in_shape = graph.values[v].shape
+            if node.op == "conv2d":
+                rel = conv_read_relation(
+                    iname, bounds, in_shape, conv_attrs["fh"],
+                    conv_attrs["fw"], conv_attrs["stride"],
+                    conv_attrs["pad"])
+                in_pads[v] = max(in_pads.get(v, 0), conv_attrs["pad"])
+            elif node.op in ("relu", "add", "layernorm", "softmax"):
+                if len(in_shape) == 3:
+                    rel = pointwise_read_relation(iname, bounds, in_shape)
+                else:
+                    rel = full_read_relation(iname, in_shape)
+            elif node.op == "matmul":
+                # operand a (pos 0) streams one token per iteration;
+                # operand b (pos 1) is the runtime matrix — broadcast
+                if pos == 0:
+                    rel = pointwise_read_relation(iname, bounds, in_shape)
+                else:
+                    rel = broadcast_read_relation(iname, bounds, in_shape)
+            elif node.op == "transpose":
+                rel = broadcast_read_relation(iname, bounds, in_shape)
+            elif node.op in ("maxpool2d", "avgpool2d"):
+                rel = pool_read_relation(iname, tuple(
+                    graph.values[node.outputs[0]].shape[1:]), in_shape,
+                    node.attrs["k"], node.attrs["stride"])
+            elif node.op in ("gemm", "global_avgpool"):
+                rel = full_read_relation(iname, in_shape)
+            else:
+                raise LoweringError(f"no read relation for {node.op}")
+            reads[v] = rel if v not in reads else reads[v].union(rel)
+            in_pads.setdefault(v, 0)
+    return reads, in_pads
+
+
+def lower(pg: PartitionedGraph, mapping: Dict[int, int],
+          quantizer=None, mesh: Optional[ChipMesh] = None
+          ) -> AcceleratorProgram:
+    """Produce per-core configurations (paper's 'lowering' step).
+
+    ``quantizer(w) -> w'`` optionally models crossbar programming noise /
+    quantization; identity by default.
+
+    ``mesh``: multi-chip scale-out.  ``mapping`` then holds *global* core
+    ids; cut edges (sends whose destination lives on another chip) are
+    additionally materialized as :class:`InterChipStream` DMA descriptors.
+    The LCU configuration is chip-agnostic by construction — the Appendix-A
+    ``S`` relation only sees array coordinates, so a consumer's frontier
+    table enforces a cross-chip dependency with the same compiled ramp as an
+    intra-chip one.
+    """
+    graph = pg.graph
+    aliases = graph_aliases(graph)
+
+    # ---- write specs: how each cross-partition value gets finalized
+    write_specs = build_write_specs(graph, pg, aliases)
 
     cores: Dict[int, CoreConfig] = {}
     for part in pg.partitions:
@@ -370,19 +476,16 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
         # Iteration space (all replicas share the full box; a replica core
         # walks its rank == repl_r (mod repl_k) stride of it).
         bounds = partition_iteration_bounds(pg, part)
-        iname = "IT"
 
         # Crossbar programming (paper Listing 1: reshape to (FL, C*FH*FW)).
         xbar_matrix = xbar_bias = None
-        conv_attrs: Dict[str, int] = {}
+        conv_attrs = partition_conv_attrs(graph, part)
         xbar_input = None
         if xbar is not None:
             w = graph.weights[xbar.inputs[1]]
             if xbar.op == "conv2d":
                 fl, c, fh, fw = w.shape
                 xbar_matrix = w.reshape(fl, c * fh * fw)
-                conv_attrs = dict(stride=xbar.attrs["stride"],
-                                  pad=xbar.attrs["pad"], fh=fh, fw=fw)
             else:
                 xbar_matrix = w
             if quantizer is not None:
@@ -392,60 +495,10 @@ def lower(pg: PartitionedGraph, mapping: Dict[int, int],
             xbar_input = _resolve_alias(graph, xbar.inputs[0], aliases)
 
         # ---- read relations per cross-partition input array
-        reads: Dict[str, isl.Map] = {}
-        in_pads: Dict[str, int] = {}
+        reads, in_pads = partition_read_relations(graph, pg, part, bounds,
+                                                  aliases)
         cross_in = {_resolve_alias(graph, v, aliases): src
                     for v, src in pg.cross_edges_into(part.idx).items()}
-        for node in part.nodes:
-            if node.op in ALIAS_OPS:
-                continue
-            for pos, raw_in in enumerate(node.inputs):
-                if raw_in in graph.weights:
-                    continue
-                v = _resolve_alias(graph, raw_in, aliases)
-                if v not in cross_in:
-                    # intra-partition value — except for the broadcast-read
-                    # operands, which by the partitioning contract can never
-                    # be produced in this partition (matmul/transpose head
-                    # their own partition precisely so both operands stream
-                    # in through the LCU)
-                    if node.op == "transpose" or (
-                            node.op == "matmul" and pos == 1):
-                        raise LoweringError(
-                            f"{node.name}: broadcast operand {v!r} must be "
-                            "cross-partition")
-                    continue
-                in_shape = graph.values[v].shape
-                if node.op == "conv2d":
-                    rel = conv_read_relation(
-                        iname, bounds, in_shape, conv_attrs["fh"],
-                        conv_attrs["fw"], conv_attrs["stride"],
-                        conv_attrs["pad"])
-                    in_pads[v] = max(in_pads.get(v, 0), conv_attrs["pad"])
-                elif node.op in ("relu", "add", "layernorm", "softmax"):
-                    if len(in_shape) == 3:
-                        rel = pointwise_read_relation(iname, bounds, in_shape)
-                    else:
-                        rel = full_read_relation(iname, in_shape)
-                elif node.op == "matmul":
-                    # operand a (pos 0) streams one token per iteration;
-                    # operand b (pos 1) is the runtime matrix — broadcast
-                    if pos == 0:
-                        rel = pointwise_read_relation(iname, bounds, in_shape)
-                    else:
-                        rel = broadcast_read_relation(iname, bounds, in_shape)
-                elif node.op == "transpose":
-                    rel = broadcast_read_relation(iname, bounds, in_shape)
-                elif node.op in ("maxpool2d", "avgpool2d"):
-                    rel = pool_read_relation(iname, tuple(
-                        graph.values[node.outputs[0]].shape[1:]), in_shape,
-                        node.attrs["k"], node.attrs["stride"])
-                elif node.op in ("gemm", "global_avgpool"):
-                    rel = full_read_relation(iname, in_shape)
-                else:
-                    raise LoweringError(f"no read relation for {node.op}")
-                reads[v] = rel if v not in reads else reads[v].union(rel)
-                in_pads.setdefault(v, 0)
 
         # ---- LCU: S per input array (Appendix A), with generated evaluator
         # and the precompiled vectorized frontier table (event engine path).

@@ -96,6 +96,29 @@ def single_point(s) -> Optional[Point]:
     return point_tuple(p, s.dim(isl.dim_type.set))
 
 
+def relation_stream(m) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Enumerate an access relation as an execution-ordered event stream.
+
+    Returns ``(iters, idx, locs)``: the distinct input iterations in
+    lexicographic order (``(n_iters, nd_in)``), and for every
+    ``iteration -> location`` pair of the relation the index of its
+    iteration (``(n_pairs,)``) plus the accessed location
+    (``(n_pairs, nd_out)``).  Cores execute their iteration boxes in
+    lexicographic order, so for a write relation this is exactly the order
+    the producer emits SRAM writes in — the stream the static verifier
+    replays against the compiled frontier ramp (``frontier_limit_ramp``).
+    """
+    nd_i = m.dim(isl.dim_type.in_)
+    nd_o = m.dim(isl.dim_type.out)
+    pairs = enumerate_map(m)
+    if not pairs:
+        return (np.zeros((0, nd_i), np.int64), np.zeros(0, np.int64),
+                np.zeros((0, nd_o), np.int64))
+    arr = np.asarray([list(i) + list(o) for i, o in pairs], np.int64)
+    iters, idx = np.unique(arr[:, :nd_i], axis=0, return_inverse=True)
+    return iters, idx.astype(np.int64).ravel(), arr[:, nd_i:]
+
+
 # ------------------------------------------------------------------ Appendix A
 @dataclasses.dataclass
 class DepInfo:

@@ -221,6 +221,48 @@ class SimStats:
                 for c in range(mesh.n_chips)]
 
 
+def static_core_sram_bytes(cfg: CoreConfig, values: Dict[str, object]) -> int:
+    """Static per-image SRAM footprint of one core, in bytes.
+
+    This is the allocation contract of the runtime state
+    (:class:`_CoreImageState`): one float32 buffer per LCU input array —
+    padded to ``(c, h + 2*pad, w + 2*pad)`` when the consumer needs a conv
+    halo — plus the pool/reduce accumulators of the core's DPU nodes.
+    ``values`` is ``graph.values`` (for accumulator extents).  The
+    structural ``sram-fits`` check and the analysis ``sram-highwater``
+    bound both derive from this single definition, so the static bound is
+    an upper bound on the simulated ``SimStats.sram_high_water`` by
+    construction (the runtime frees a buffer set only when its image
+    completes).
+    """
+    need = 0
+    for lc in cfg.lcu.values():
+        shp = lc.shape
+        if len(shp) == 3 and lc.pad:
+            c, h, w = shp
+            need += 4 * c * (h + 2 * lc.pad) * (w + 2 * lc.pad)
+        else:
+            need += 4 * int(np.prod(shp))
+    for n in cfg.dpu_nodes:
+        if n.op in ("maxpool2d", "avgpool2d", "global_avgpool"):
+            need += values[n.outputs[0]].nbytes
+    return need
+
+
+def static_expected_chunks(kind: str, shape: Tuple[int, ...]) -> int:
+    """Messages one image of a value arrives in, by write kind.
+
+    The static form of the request plan's output accounting (and of the
+    analysis link-load estimate): ``full``/``reduce`` values land as one
+    message, ``pixel``/``pool`` values as one message per output pixel.
+    """
+    if kind in ("full", "reduce"):
+        return 1
+    if kind in ("pixel", "pool"):
+        return int(shape[1]) * int(shape[2])
+    raise NotImplementedError(kind)
+
+
 class _CoreImageState:
     """Per-(core, image) runtime state (reference engine)."""
 
@@ -693,13 +735,7 @@ class Simulator:
         core = next(c for c in prog.cores.values()
                     for s in c.sends if s.value == value and s.to_gmem)
         spec = next(s for s in core.sends if s.value == value)
-        if spec.write.kind in ("full", "reduce"):
-            return 1
-        if spec.write.kind == "pixel":
-            return shape[1] * shape[2]
-        if spec.write.kind == "pool":
-            return shape[1] * shape[2]
-        raise NotImplementedError(spec.write.kind)
+        return static_expected_chunks(spec.write.kind, shape)
 
     def _gmem_write(self, out: Dict[str, np.ndarray], counts, m: Message):
         arr = out[m.value]
@@ -812,7 +848,8 @@ class Simulator:
                     desc, np.ascontiguousarray(win.reshape(-1)))
             else:  # gemm
                 vbuf = st.sram[cfg.xbar_input]
-                y = self.plane.mxv_one(desc, vbuf.reshape(-1))
+                y = self.plane.mxv_one(
+                    desc, np.ascontiguousarray(vbuf.reshape(-1)))
             if cfg.xbar_bias is not None:
                 y = y + cfg.xbar_bias
             env[cfg.xbar_node.outputs[0]] = y.astype(np.float32)

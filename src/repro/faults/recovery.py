@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
-from ..core.compiler import validate_program
+from ..core.compiler import CompileValidationError, validate_program
 from ..core.hwspec import ChipMesh, ChipSpec, submesh
 from ..core.lowering import AcceleratorProgram, lower
 from ..core.mapping import MappingError, map_partitions, map_partitions_mesh
@@ -85,7 +85,8 @@ class RemapResult:
 
 def remap_program(graph, chip: ChipSpec = None, mesh: ChipMesh = None,
                   dead_cores=(), reserved_cores=(),
-                  quantizer=None, replicate=None) -> RemapResult:
+                  quantizer=None, replicate=None,
+                  analyze: bool = False) -> RemapResult:
     """Re-compile ``graph`` onto the surviving cores.
 
     ``dead_cores`` are failed (global) core ids; ``reserved_cores`` are
@@ -135,8 +136,17 @@ def remap_program(graph, chip: ChipSpec = None, mesh: ChipMesh = None,
             plan[worst] = live[worst] - 1
             if plan[worst] <= 1:
                 del plan[worst]
-    # same post-mapping invariant guard as compile_model(validate=True)
-    validate_program(prog, chip if mesh is None else None)
+    # same post-mapping invariant guard as compile_model(validate=True);
+    # analyze=True escalates to the full static verifier — a recovery
+    # remap is exactly the compile path that never went through CI, so
+    # proving race/deadlock freedom before serving resumes is cheap
+    # insurance (same contract as compile_model(analyze=True))
+    if analyze:
+        from ..analysis import verify_program
+        report = verify_program(prog, None if mesh is not None else chip)
+        report.raise_if_errors(CompileValidationError)
+    else:
+        validate_program(prog, chip if mesh is None else None)
     cores = tuple(sorted(prog.cores))
     n_xbar = sum(1 for cfg in prog.cores.values()
                  if cfg.xbar_node is not None)

@@ -1,0 +1,308 @@
+"""Static program verifier (repro.analysis) — mutation-tested.
+
+Strategy: compile known-good programs, assert the verifier is silent;
+then corrupt one artifact per test (frontier table ranks, replica
+residues, dep wiring, DMA streams, resource limits) and assert the
+corruption is caught *by name*.  The same expected-check constants apply
+under both polyhedral backends (islpy exact / fisl finite) — CI runs the
+suite under each, which pins verdict parity.
+
+Tables from ``poly.compile_lcu`` are cached and *shared* across compiles
+(content-addressed), so mutations must replace ``dep.table`` with a
+``dataclasses.replace(...)`` copy — never write into ``table.rank`` in
+place, or later tests would see the corruption.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import (AnalysisDiagnostic, AnalysisError, AnalysisReport,
+                            verify_program)
+from repro.core import poly
+from repro.core.compiler import (CompileValidationError, compile_model,
+                                 place_tenants, validate_program)
+from repro.core.graph import (build_fig2_graph, build_lenet_like,
+                              build_resnet_block_chain,
+                              build_tiny_transformer)
+from repro.core.hwspec import make_chip
+from repro.faults.recovery import remap_program
+
+CHIP = make_chip(12, "all_to_all")
+
+ZOO = {
+    "fig2": build_fig2_graph,
+    "lenet": build_lenet_like,
+    "resnet4": lambda: build_resnet_block_chain(n_blocks=4),
+    "tiny_xfmr": build_tiny_transformer,
+}
+
+
+def _lenet_prog():
+    return compile_model(build_lenet_like(), CHIP, validate=True)
+
+
+def _pick_dep(prog):
+    """First (core cfg, lcu cfg, dep) whose table actually constrains."""
+    for _, cfg in sorted(prog.cores.items()):
+        for _, lc in sorted(cfg.lcu.items()):
+            for d in lc.deps:
+                if d.table is not None and not d.table.never_constrains:
+                    return cfg, lc, d
+    raise AssertionError("no constraining dep in program")
+
+
+# --------------------------------------------------------------- clean zoo
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_verifies_clean(name):
+    prog = compile_model(ZOO[name](), CHIP, validate=True)
+    rep = verify_program(prog, CHIP)
+    assert rep.ok and not rep.diagnostics, rep.summary()
+    assert rep.backend == ("islpy" if poly.HAVE_ISL else "fisl")
+    assert rep.checks_run == ("structural", "dependences", "progress",
+                              "resources")
+    assert rep.metrics["deps_checked"] > 0
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_replicated_verifies_clean(name):
+    prog = compile_model(ZOO[name](), CHIP, validate=True, replicate="auto")
+    rep = verify_program(prog, CHIP)
+    assert rep.ok and not rep.diagnostics, rep.summary()
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_mesh_verifies_clean(name):
+    prog = compile_model(ZOO[name](), CHIP, chips=2, validate=True)
+    rep = verify_program(prog)  # mesh programs carry their chip
+    assert rep.ok and not rep.diagnostics, rep.summary()
+
+
+def test_tenants_verify_clean():
+    pl = place_tenants([build_fig2_graph(), build_lenet_like()], CHIP)
+    for prog in pl.programs:
+        rep = verify_program(prog, pl.chip)
+        assert rep.ok and not rep.diagnostics, rep.summary()
+
+
+# ------------------------------------------------- mutations: dependences
+def test_saturated_ranks_caught_as_frontier_unsound():
+    # every entry claims the final reader rank: the ramp reaches INF after
+    # the first write and admits reads long before their writers
+    prog = _lenet_prog()
+    _, _, d = _pick_dep(prog)
+    t = d.table
+    r = t.rank.copy()
+    r[r >= 0] = t.d_lexmax_rank
+    d.table = dataclasses.replace(t, rank=r)
+    rep = verify_program(prog, CHIP)
+    assert "frontier-unsound" in rep.checks()
+    assert not rep.ok
+
+
+def test_shifted_lexmin_caught_as_frontier_unsound():
+    # pre-stream admission window [0, d_lexmin) swallows dependent readers
+    prog = _lenet_prog()
+    _, _, d = _pick_dep(prog)
+    d.table = dataclasses.replace(d.table,
+                                  d_lexmin_rank=d.table.d_lexmin_rank + 1000)
+    rep = verify_program(prog, CHIP)
+    assert "frontier-unsound" in rep.checks()
+
+
+def test_single_rank_entry_corruption_caught():
+    # one table cell disagrees with the generated Appendix-A evaluator
+    prog = _lenet_prog()
+    _, _, d = _pick_dep(prog)
+    r = d.table.rank.copy()
+    loc = tuple(np.argwhere(r >= 1)[-1])
+    r[loc] -= 1
+    d.table = dataclasses.replace(d.table, rank=r)
+    rep = verify_program(prog, CHIP)
+    assert "codegen-table-mismatch" in rep.checks()
+
+
+def test_cleared_deps_caught_as_dangling():
+    prog = _lenet_prog()
+    _, lc, _ = _pick_dep(prog)
+    lc.deps.clear()
+    rep = verify_program(prog, CHIP)
+    assert "dangling-dep" in rep.checks()
+
+
+def test_unmapped_producer_caught_as_dangling():
+    prog = _lenet_prog()
+    _, _, d = _pick_dep(prog)
+    d.src_partition = 99
+    rep = verify_program(prog, CHIP)
+    assert "dangling-dep" in rep.checks()
+
+
+def test_duplicate_residue_caught():
+    # two replicas claim residue 0 (mod k): their write streams overlap
+    # (two unordered writers per cell) and residue 1 is never produced
+    prog = compile_model(build_lenet_like(), CHIP, validate=True,
+                         replicate="auto")
+    repl = [cfg for cfg in prog.cores.values() if cfg.repl_k > 1]
+    assert repl, "auto replication produced no replicated stage"
+    victim = next(cfg for cfg in repl if cfg.repl_r == 1)
+    victim.repl_r = 0
+    rep = verify_program(prog, CHIP)
+    assert "replica-residues" in rep.checks()
+    assert "dangling-dep" in rep.checks()  # residue 1 iterations uncovered
+
+
+# --------------------------------------------------- mutations: progress
+def test_zeroed_table_caught_as_gate_never_lifts():
+    # rank[:] = -1: no write ever advances the ramp past d_lexmin - 1, so
+    # the consumer's tail iterations stall after the stream ends
+    prog = _lenet_prog()
+    _, _, d = _pick_dep(prog)
+    r = d.table.rank.copy()
+    r[:] = -1
+    d.table = dataclasses.replace(d.table, rank=r)
+    rep = verify_program(prog, CHIP)
+    assert "gate-never-lifts" in rep.checks()
+
+
+def test_rewired_dep_caught_as_wait_cycle():
+    # point an upstream stage's gate at a downstream stage: the chain
+    # closes into a cycle and both stages withhold each other's writes
+    prog = _lenet_prog()
+    parts = sorted({cfg.partition_idx for cfg in prog.cores.values()})
+    assert len(parts) >= 2
+    cfg = next(c for c in prog.cores.values() if c.partition_idx == parts[1])
+    rewired = False
+    for _, lc in sorted(cfg.lcu.items()):
+        for d in lc.deps:
+            if d.src_partition >= 0:
+                d.src_partition = parts[-1]
+                rewired = True
+                break
+        if rewired:
+            break
+    assert rewired
+    rep = verify_program(prog, CHIP)
+    assert "wait-cycle" in rep.checks()
+
+
+def test_dropped_dma_stream_caught():
+    small = make_chip(4, "all_to_all")
+    prog = compile_model(build_resnet_block_chain(n_blocks=4), small,
+                         chips=2, validate=True)
+    assert prog.dma_streams, "expected a cross-chip cut for this fixture"
+    prog.dma_streams.clear()
+    rep = verify_program(prog)
+    assert "missing-dma-stream" in rep.checks()
+
+
+# -------------------------------------------------- mutations: resources
+def test_sram_highwater_scales_with_inflight():
+    prog = _lenet_prog()
+    rep1 = verify_program(prog, CHIP, max_inflight=1)
+    assert rep1.ok
+    cap = CHIP.core.sram_bytes
+    worst = max(rep1.metrics["sram_bound_bytes"].values())
+    depth = cap // worst + 1
+    rep2 = verify_program(prog, CHIP, max_inflight=depth)
+    assert "sram-highwater" in rep2.checks()
+    assert rep2.metrics["sram_bound_bytes"] != rep1.metrics["sram_bound_bytes"]
+
+
+def test_link_load_warning_is_not_an_error():
+    small = make_chip(4, "all_to_all")
+    prog = compile_model(build_resnet_block_chain(n_blocks=4), small,
+                         chips=2, validate=True)
+    rep = verify_program(prog)
+    assert rep.ok  # warnings never flip ok
+    loads = rep.metrics.get("link_load")
+    if loads:  # cut mesh: loads computed and any >1.0 surfaced as warning
+        over = [k for k, v in loads.items() if v > 1.0]
+        assert len(over) == len(rep.warnings())
+        for w in rep.warnings():
+            assert w.check == "link-load"
+
+
+# ------------------------------------------------ API / backward compat
+def test_validate_program_compat_raises_by_invariant():
+    prog = _lenet_prog()
+    bad = dict(prog.mapping)
+    bad[max(bad)] = 10 ** 6
+    broken = dataclasses.replace(prog, mapping=bad)
+    with pytest.raises(CompileValidationError) as ei:
+        validate_program(broken, CHIP)
+    assert ei.value.invariant == "cores-on-chip"
+    assert isinstance(ei.value, AnalysisError)
+
+
+def test_validate_program_still_needs_chip():
+    prog = _lenet_prog()
+    with pytest.raises(ValueError):
+        validate_program(prog)
+
+
+def test_compile_model_analyze_raises_on_corruption(monkeypatch):
+    g = build_lenet_like()
+    assert compile_model(g, CHIP, analyze=True) is not None
+    import repro.core.lowering as lowering
+
+    orig = lowering.lower
+
+    def corrupting_lower(*a, **kw):
+        prog = orig(*a, **kw)
+        _, lc, _ = _pick_dep(prog)
+        lc.deps.clear()
+        return prog
+
+    monkeypatch.setattr("repro.core.compiler.lower", corrupting_lower)
+    with pytest.raises(CompileValidationError) as ei:
+        compile_model(g, CHIP, analyze=True)
+    assert ei.value.invariant == "dangling-dep"
+
+
+def test_remap_program_analyze():
+    res = remap_program(build_lenet_like(), chip=CHIP, dead_cores=(0,),
+                        analyze=True)
+    assert 0 not in res.cores
+    rep = verify_program(res.program, CHIP)
+    assert rep.ok
+
+
+def test_report_raise_if_errors_names_first_check():
+    rep = AnalysisReport(diagnostics=[
+        AnalysisDiagnostic(check="a-check", severity="warning", message="w"),
+        AnalysisDiagnostic(check="b-check", severity="error", message="m1"),
+        AnalysisDiagnostic(check="c-check", severity="error", message="m2"),
+    ])
+    assert not rep.ok
+    with pytest.raises(AnalysisError) as ei:
+        rep.raise_if_errors()
+    assert ei.value.invariant == "b-check"
+    assert "m2" in str(ei.value)  # later errors folded into the message
+
+
+def test_check_subset_selection():
+    prog = _lenet_prog()
+    rep = verify_program(prog, CHIP, checks=("structural",))
+    assert rep.checks_run == ("structural",)
+    assert "deps_checked" not in rep.metrics
+    with pytest.raises(ValueError):
+        verify_program(prog, CHIP, checks=("nonsense",))
+
+
+def test_static_bound_covers_simulated_highwater():
+    # the static SRAM bound must dominate what the simulator actually
+    # allocates for a single in-flight image
+    from repro.core import Simulator
+
+    g = build_lenet_like()
+    prog = compile_model(g, CHIP, validate=True)
+    rep = verify_program(prog, CHIP)
+    sim = Simulator(prog, CHIP)
+    x = np.random.default_rng(0).standard_normal(
+        g.values[g.inputs[0]].shape).astype(np.float32)
+    _, stats = sim.run([x])
+    bounds = rep.metrics["sram_bound_bytes"]
+    for cid, hw in stats.sram_high_water.items():
+        assert hw <= bounds[cid], (cid, hw, bounds[cid])

@@ -1,0 +1,49 @@
+"""tools/lint_contiguity.py — the contiguity convention stays enforced."""
+
+import importlib.util
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "lint_contiguity", REPO / "tools" / "lint_contiguity.py")
+lint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint)
+
+
+def _msgs(src):
+    return [m for _, _, m in lint.lint_source(src, "<test>")]
+
+
+def test_repo_is_clean():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint_contiguity.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_flags_transposed_einsum_operand():
+    assert _msgs("import numpy as np\ny = np.einsum('ij,jk->ik', a.T, b)\n")
+
+
+def test_flags_sliced_plane_operand():
+    assert _msgs("y = mxv_one(desc, v[:, 0])\n")
+    assert _msgs("y = mxv_batch(desc, V.transpose(1, 0))\n")
+    assert _msgs("y = dyn_mxv_one(m, v.reshape(-1))\n")
+
+
+def test_wrapped_and_benign_operands_pass():
+    ok = (
+        "import numpy as np\n"
+        "y = np.einsum('ij,jk->ik', np.ascontiguousarray(a.T), b)\n"
+        "z = mxv_one(desc, np.ascontiguousarray(v[:, 0]))\n"
+        "w = mxv_batch(desc, V)\n"
+        "u = dyn_mxv_one(m, p['w'])\n"      # dict lookup, not a view
+        "t = dyn_mxv_batch(m, V[i])\n"      # leading-axis row: contiguous
+    )
+    assert not _msgs(ok)
+
+
+def test_flags_einsum_out_keyword():
+    assert _msgs("np.einsum('ij->ji', a, out=buf[:, 0])\n")

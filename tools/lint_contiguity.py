@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""AST lint: non-contiguous operands fed to einsum / compute-plane calls.
+
+The crossbar MxV planes (``kernels/mxv.py``, ``core/compute_plane.py``)
+and the stacked ``np.einsum`` paths are written against C-contiguous
+operands: a strided view (transpose, slice, ``swapaxes``) silently falls
+back to einsum's slow gather path, and the Pallas kernel requires dense
+row-major input outright.  The repo's convention is to route any operand
+that is not obviously contiguous through ``np.ascontiguousarray(...)`` at
+the call site.
+
+This linter enforces the convention syntactically.  An *operand* of
+``np.einsum(spec, a, b, ...)`` or of a plane call
+(``mxv_one`` / ``mxv_batch`` / ``dyn_mxv_one`` / ``dyn_mxv_batch``) is
+flagged when it is a view-producing expression — a subscript (slicing),
+an ``x.T`` attribute, or a ``.transpose()`` / ``.swapaxes()`` /
+``.reshape()`` method call — that is not wrapped in
+``np.ascontiguousarray``.  Plain names and other calls pass: the linter
+is a convention check, not an alias analysis; wrapping at the producer
+and passing the name is fine.
+
+Usage: ``python tools/lint_contiguity.py [paths...]`` (defaults to
+``src/`` and ``benchmarks/``).  Exits 1 when violations are found.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+#: Compute-plane entry points whose array operands must be contiguous.
+PLANE_FUNCS = frozenset({"mxv_one", "mxv_batch", "dyn_mxv_one",
+                         "dyn_mxv_batch"})
+
+#: ndarray methods that (can) return strided or re-laid-out views.
+VIEW_METHODS = frozenset({"transpose", "swapaxes", "reshape"})
+
+
+def _callee_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _is_ascontiguous(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _callee_name(node) == "ascontiguousarray")
+
+
+def _has_slice(index: ast.AST) -> bool:
+    if isinstance(index, ast.Slice):
+        return True
+    if isinstance(index, ast.Tuple):
+        return any(_has_slice(e) for e in index.elts)
+    return False
+
+
+def _is_view_expr(node: ast.AST) -> Tuple[bool, str]:
+    """Does this expression syntactically produce a (possibly) strided view?
+
+    Only *slicing* subscripts are flagged: a plain single index (``V[i]``,
+    ``p["w"]``) is either a dict lookup or a leading-axis row of a
+    C-contiguous array — contiguous either way — while any subscript
+    containing a ``:`` can stride.
+    """
+    if isinstance(node, ast.Subscript) and _has_slice(node.slice):
+        return True, "sliced subscript (strided view)"
+    if isinstance(node, ast.Attribute) and node.attr == "T":
+        return True, ".T (transposed view)"
+    if isinstance(node, ast.Call):
+        name = _callee_name(node)
+        if name in VIEW_METHODS and isinstance(node.func, ast.Attribute):
+            return True, f".{name}() (view / relayout)"
+    return False, ""
+
+
+def _operands(call: ast.Call) -> Iterator[ast.AST]:
+    name = _callee_name(call)
+    if name == "einsum":
+        # first positional arg is the spec string; the rest are operands
+        # (an out= keyword is a write target, also contiguity-sensitive)
+        for arg in call.args[1:]:
+            yield arg
+        for kw in call.keywords:
+            if kw.arg == "out":
+                yield kw.value
+    elif name in PLANE_FUNCS:
+        for arg in call.args:
+            yield arg
+        for kw in call.keywords:
+            if kw.arg is not None:
+                yield kw.value
+
+
+def lint_source(src: str, filename: str) -> List[Tuple[str, int, str]]:
+    """Return ``(filename, lineno, message)`` per violation."""
+    try:
+        tree = ast.parse(src, filename=filename)
+    except SyntaxError as e:
+        return [(filename, e.lineno or 0, f"syntax error: {e.msg}")]
+    out: List[Tuple[str, int, str]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _callee_name(node)
+        if callee != "einsum" and callee not in PLANE_FUNCS:
+            continue
+        for op in _operands(node):
+            if _is_ascontiguous(op):
+                continue
+            bad, why = _is_view_expr(op)
+            if bad:
+                out.append((
+                    filename, op.lineno,
+                    f"{callee}() operand is a {why}; wrap it in "
+                    f"np.ascontiguousarray(...) or hoist a contiguous copy"))
+    return out
+
+
+def lint_paths(paths: List[str]) -> List[Tuple[str, int, str]]:
+    files: List[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            files.extend(sorted(pp.rglob("*.py")))
+        else:
+            files.append(pp)
+    out: List[Tuple[str, int, str]] = []
+    for f in files:
+        out.extend(lint_source(f.read_text(), str(f)))
+    return out
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or ["src", "benchmarks"]
+    violations = lint_paths(paths)
+    for fn, line, msg in violations:
+        print(f"{fn}:{line}: {msg}")
+    if violations:
+        print(f"lint_contiguity: {len(violations)} violation(s)")
+        return 1
+    print("lint_contiguity: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
