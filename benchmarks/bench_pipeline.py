@@ -100,7 +100,45 @@ def run(smoke: bool = False) -> list:
             })
     rows.extend(run_mesh(smoke))
     rows.extend(run_replicated(smoke))
+    rows.extend(run_trace_overhead())
     return rows
+
+
+def run_trace_overhead() -> list:
+    """The observability zero-cost contract, measured (ISSUE 9): the same
+    program run plain vs with ``stalls=True`` + a ``TraceRecorder``.
+    Asserted: bitwise-identical outputs and identical cycle/message
+    counters (``trace=None`` must cost nothing, and tracing must not
+    perturb the timing model).  Reported: ``trace_overhead_ms``, a
+    wall-clock field gated by ``--check``'s tolerance bounds so runaway
+    instrumentation cost fails CI.
+    """
+    from repro.obs import TraceRecorder
+    graph = build_lenet_like()
+    chip = make_chip(8, "banded")
+    prog = compile_model(graph, chip)
+    rng = np.random.default_rng(0)
+    images = [rng.normal(size=(1, 12, 12)).astype(np.float32)
+              for _ in range(4)]
+    sim = Simulator(prog, chip, check_raw=False)
+    t0 = time.perf_counter()
+    o0, s0 = sim.run(images)
+    plain = time.perf_counter() - t0
+    tr = TraceRecorder()
+    t0 = time.perf_counter()
+    o1, s1 = sim.run(images, trace=tr, stalls=True)
+    traced = time.perf_counter() - t0
+    assert (s0.cycles, s0.messages) == (s1.cycles, s1.messages), \
+        "tracing perturbed the timing model"
+    _assert_same_outputs([o0[0]], [o1[0]], "trace=None vs traced run")
+    s1.stalls.check()                 # busy + stalls == run cycles
+    n_events = len(tr.finalize(s1.cycles - 1,
+                               sim.stage_of_core())["traceEvents"])
+    return [{"bench": "pipeline", "case": "lenet/trace_overhead",
+             "cycles": s0.cycles, "messages": s0.messages,
+             "trace_events": n_events,
+             "plain_ms": round(plain * 1e3, 1),
+             "trace_overhead_ms": round(max(0.0, traced - plain) * 1e3, 1)}]
 
 
 def run_replicated(smoke: bool = False) -> list:

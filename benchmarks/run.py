@@ -100,21 +100,46 @@ def _unique_rows(rows):
     return {i: r for i, r in by_id.items() if counts[i] == 1}, n_dupes
 
 
+def _explain_unmatched(ident, base_idents):
+    """Why did this row match no baseline row?  Find the baseline identity
+    sharing the most fields and name the *first* field that differs, with
+    both values — turning a silent skip into an actionable diagnosis
+    (typically: a renamed case label or a drifted deterministic float)."""
+    best, best_shared = None, -1
+    for cand in base_idents:
+        shared = len(set(ident) & set(cand))
+        if shared > best_shared:
+            best, best_shared = cand, shared
+    if best is None:
+        return "no baseline rows at all"
+    a, b = dict(ident), dict(best)
+    for k in sorted(set(a) | set(b)):
+        if a.get(k, "<absent>") != b.get(k, "<absent>"):
+            return (f"nearest baseline row differs at {k}: "
+                    f"current={a.get(k, '<absent>')!r} "
+                    f"baseline={b.get(k, '<absent>')!r}")
+    return "identity equals a non-unique baseline row (duplicate skipped)"
+
+
 def check_rows(name: str, rows, baseline_rows, tolerance: float,
                wall_slack_ms: float):
     """Compare a bench's rows to the committed baseline.
 
-    Returns ``(regressions, n_compared, n_skipped)`` — ``n_skipped`` counts
-    rows that could not be compared (duplicate identity on the current
-    side, or no unique baseline row with that identity).
+    Returns ``(regressions, n_compared, skipped)`` — ``skipped`` is one
+    message per row that could not be compared (duplicate identity on the
+    current side, or no unique baseline row with that identity), each
+    naming the first mismatching identity field and both values.
     """
     cur, cur_dupes = _unique_rows(rows)
     base, _ = _unique_rows(baseline_rows)
     regressions, n_compared = [], 0
-    n_skipped = cur_dupes
+    skipped = [f"{name}: {cur_dupes} row(s) with duplicate identity "
+               "on the current side"] if cur_dupes else []
     for ident, row in cur.items():
         if ident not in base:
-            n_skipped += 1
+            label = ", ".join(f"{k}={v}" for k, v in ident) or "<row>"
+            skipped.append(f"{name}: unmatched row [{label}]: "
+                           f"{_explain_unmatched(ident, list(base))}")
             continue
         bl = base[ident]
         label = ", ".join(f"{k}={v}" for k, v in ident) or "<row>"
@@ -134,7 +159,7 @@ def check_rows(name: str, rows, baseline_rows, tolerance: float,
                     regressions.append(
                         f"{name}: {label}: {k} {bl[k]}ms -> {v}ms "
                         f"(> limit {round(limit, 1)}ms)")
-    return regressions, n_compared, n_skipped
+    return regressions, n_compared, skipped
 
 
 def main() -> None:
@@ -206,13 +231,15 @@ def main() -> None:
                 print(f"  check: no baseline {base_path}, skipped")
                 continue
             baseline = json.loads(base_path.read_text())
-            regs, n_cmp, n_skip = check_rows(
+            regs, n_cmp, skipped = check_rows(
                 name, rows, baseline.get("rows", []),
                 args.tolerance, args.wall_slack_ms)
             regressions += regs
-            print(f"  check: {n_cmp} rows compared, {n_skip} skipped "
+            print(f"  check: {n_cmp} rows compared, {len(skipped)} skipped "
                   f"(unmatched or duplicate identity), {len(regs)} "
                   f"regressions")
+            for msg in skipped:
+                print(f"    skipped: {msg}")
 
     if regressions:
         print("PERF REGRESSIONS:")

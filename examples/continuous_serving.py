@@ -35,7 +35,9 @@ def cm_serving():
         server.submit_image(image, arrival=int(arrival), tenant=i % 2)
 
     report = server.drain()            # submit -> drain -> latency table
-    print(report.table())
+    # to_table() = per-request table + the metrics-registry footer
+    # (counters + cycle histograms CmServer populated during the serve)
+    print(report.to_table())
     for tk in range(placement.n_tenants):
         print(f"tenant {tk}: p50={report.percentile(50, tenant=tk):.0f} "
               f"p99={report.percentile(99, tenant=tk):.0f} cycles")
@@ -44,6 +46,9 @@ def cm_serving():
     for tk, s in enumerate(per):
         print(f"tenant {tk}: busy cores={sorted(s.busy)} "
               f"mean util={s.mean_utilization():.1%}")
+    # machine-readable form of the same report (summary + per-request
+    # rows + metrics snapshot), e.g. for dashboards / regression diffs
+    print(f"to_json(): {len(report.to_json())} bytes of JSON")
 
 
 def jax_batcher():

@@ -21,6 +21,8 @@ live request stream and walks the full degradation story:
 Run: PYTHONPATH=src python examples/fault_tolerant_serving.py
 """
 
+import json
+
 import numpy as np
 
 from repro.core import build_fig2_graph, make_chip, place_tenants
@@ -59,7 +61,9 @@ def main():
                    reprogram_cost_cycles=32)
     rep = srv.serve_images(images, arrivals=arrivals)
     print("\n=== recovery: remap + retry ===")
-    print(rep.table())
+    # to_table() appends the metrics-registry footer: retry/remap counters
+    # and the queue/service/latency cycle histograms of the serve
+    print(rep.to_table())
     for ev in rep.remap_events:
         print(f"remap: tenant {ev['tenant']} at cycle {ev['cycle']}: "
               f"dead {ev['dead_cores']} -> cores {ev['new_cores']} "
@@ -69,6 +73,10 @@ def main():
         np.array_equal(r.output[k], clean.by_rid()[r.rid].output[k])
         for r in rep.requests if r.succeeded for k in r.output)
     print(f"recovered outputs bitwise equal to clean run: {ok}")
+    summary = json.loads(rep.to_json())["summary"]
+    print(f"to_json() summary: goodput={summary['goodput']} "
+          f"retries={summary['n_retries']} remaps={summary['n_remaps']} "
+          f"reprogram_cycles={summary['reprogram_cycles']}")
 
     # 4. crossbar value faults: stuck cells + drift, deterministic per seed
     noisy = CmServer(placement, chip,

@@ -116,6 +116,9 @@ from .compute_plane import descriptor_for, dyn_descriptor_for, resolve_plane
 from .lowering import AcceleratorProgram, CoreConfig, SendSpec
 from .hwspec import ChipMesh, ChipSpec
 from . import poly
+# observability (ISSUE 9): pure module — no repro.core imports at load time,
+# so this does not cycle through core/__init__
+from ..obs import stalls as obs_stalls
 
 Point = Tuple[int, ...]
 
@@ -185,6 +188,9 @@ class SimStats:
     # failed (its deadline).  Disjoint from ``completion_cycle``; a request
     # appears in exactly one of the two once the run ends.
     failed_cycle: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Stall attribution (ISSUE 9): populated only by ``run(stalls=True)``;
+    # both engines must produce the identical breakdown.
+    stalls: Optional["obs_stalls.StallBreakdown"] = None
 
     def utilization(self, core: int) -> float:
         if core not in self.first_busy:
@@ -496,7 +502,7 @@ class Simulator:
     def run(self, images: List[np.ndarray], schedule: str = "pipelined",
             max_cycles: int = 1_000_000, *, arrivals=None, tenants=None,
             max_inflight: Optional[int] = None, priorities=None,
-            deadlines=None
+            deadlines=None, stalls: bool = False, trace=None
             ) -> Tuple[List[Dict[str, np.ndarray]], SimStats]:
         """Simulate ``images`` through the resident program(s).
 
@@ -524,22 +530,60 @@ class Simulator:
                            the failure-detection contract: a request stalled
                            by an injected fault resolves at its deadline
                            instead of hanging the run.
+        ``stalls``       — classify every idle core-cycle into the closed
+                           taxonomy of ``repro.obs.stalls`` and attach the
+                           :class:`~repro.obs.stalls.StallBreakdown` as
+                           ``SimStats.stalls``.  Both engines produce the
+                           identical breakdown.
+        ``trace``        — a ``repro.obs.trace.TraceRecorder`` collecting
+                           execution/GCU/link spans and fault instants in
+                           simulated cycles (Chrome-trace export).
+                           Observability contract: ``stalls=False,
+                           trace=None`` (the defaults) add zero work —
+                           counters and outputs stay bitwise-identical.
         """
         assert schedule in ("pipelined", "sequential")
         n = len(images)
         plan = _RequestPlan(self, n, schedule, arrivals, tenants,
                             max_inflight, priorities, deadlines)
         if self.engine == "reference":
-            return self._run_reference(images, schedule, max_cycles, plan)
-        return _EventEngine(self, images, schedule, max_cycles, plan).run()
+            return self._run_reference(images, schedule, max_cycles, plan,
+                                       stalls=stalls, trace=trace)
+        return _EventEngine(self, images, schedule, max_cycles, plan,
+                            stalls=stalls, trace=trace).run()
+
+    def stage_of_core(self) -> Dict[int, str]:
+        """Core id -> pipeline-stage name (the replica-group leader's first
+        node), ``t<k>:``-prefixed on multi-tenant runs.  Replica cores of
+        one stage share a name, so breakdowns roll up per stage."""
+        out: Dict[int, str] = {}
+        multi = len(self.progs) > 1
+        for cid, cfg in self.cores_merged.items():
+            tk = self.tenant_of_core[cid]
+            pg = self.progs[tk].pgraph
+            name = pg.partitions[pg.leader_of(cfg.partition_idx)].nodes[0].name
+            out[cid] = f"t{tk}:{name}" if multi else name
+        return out
 
     # =========================================================== reference
-    def _run_reference(self, images, schedule, max_cycles, plan):
+    def _run_reference(self, images, schedule, max_cycles, plan,
+                       stalls=False, trace=None):
         chip = self.chip
         progs = self.progs
         tenants = plan.tenants
         n_images = len(images)
         stats = SimStats()
+        # Stall-attribution oracle state (``stalls=True`` only — the plain
+        # path must stay bitwise-identical): per-core category counts, the
+        # GCU stream windows, and the delayed-message intervals feeding the
+        # ``link-delay`` predicate.  Only messages slower than the paper's
+        # one-cycle hop are recorded (cross-chip transfer delay / degraded
+        # links), so healthy intra-chip traffic never reads as link delay.
+        stall_counts = {cid: defaultdict(int) for cid in self.cores_merged} \
+            if stalls else None
+        gcu_send_end: Dict[int, int] = {}
+        delayed = defaultdict(list) if stalls else None
+        gcu_busy = 0
         inflight: List[Message] = []
         states: Dict[Tuple[int, int], _CoreImageState] = {}
         outputs: List[Dict[str, np.ndarray]] = [
@@ -609,6 +653,8 @@ class Simulator:
                         and not img_complete[im] and not failed[im]:
                     failed[im] = True
                     stats.failed_cycle[im] = cycle
+                    if trace is not None:
+                        trace.add_instant("deadline-failed", cycle, image=im)
                     progress = True
 
             # 2. GCU streaming (arrivals next cycle).  Failed images free
@@ -629,7 +675,18 @@ class Simulator:
                         n_started += 1
                         stats.gcu_start_cycle[cur_req] = cycle
                         stream_seq[tenants[cur_req]].append(cur_req)
+                        if stalls or trace is not None:
+                            g_ = progs[tenants[cur_req]].gcu
+                            _, ih_, iw_ = g_.input_shape
+                            end_ = cycle + (ih_ * iw_ - 1) \
+                                // chip.dma_pixels_per_cycle
+                            gcu_send_end[cur_req] = end_
+                            if trace is not None:
+                                trace.add_gcu(cur_req, tenants[cur_req],
+                                              cycle, end_)
             if cur_req is not None:
+                if stalls:
+                    gcu_busy += 1   # a picked request always streams >= 1px
                 gcu = progs[tenants[cur_req]].gcu
                 _, ih, iw = gcu.input_shape
                 gcu_total = ih * iw
@@ -649,16 +706,31 @@ class Simulator:
                     gcu_done.add(cur_req)
                     cur_req = None
 
-            # 3. core execution (based on start-of-cycle state)
+            # 3. core execution (based on start-of-cycle state).  With
+            # ``stalls`` every skipped core is classified per cycle — this
+            # inline scan is the attribution oracle the event engine's
+            # reconstruction is asserted against.
             for core_id, cfg in self.cores_merged.items():
                 d = dead_at.get(core_id)
                 if d is not None and cycle >= d:
+                    if stalls:
+                        stall_counts[core_id][obs_stalls.DEAD] += 1
                     continue                 # dead core: executes nothing
                 img = current_image(core_id)
                 if img is None:
+                    if stalls:
+                        stall_counts[core_id][obs_stalls.classify_unassigned(
+                            cycle, self.tenant_of_core[core_id], n_images,
+                            plan.arrivals, tenants, stats.gcu_start_cycle,
+                            gcu_send_end, stats.failed_cycle)] += 1
                     continue
                 st = state(core_id, img)
                 if st.done:
+                    # unreachable (current_image skips core_done images,
+                    # set exactly when st.done flips); classified anyway so
+                    # the accounting identity cannot silently leak a cycle
+                    if stalls:
+                        stall_counts[core_id][obs_stalls.DRAINED] += 1
                     continue
                 # replica cores walk the rank == repl_r (mod repl_k) stride
                 # of the box; st.counter stays a local index
@@ -666,12 +738,59 @@ class Simulator:
                                 cfg.iter_bounds)
                 if not all(fr.safe(it) for frd in st.frontiers.values()
                            for fr in frd.values()):
+                    if stalls:
+                        if failed[img]:
+                            cat = obs_stalls.FAILED
+                        else:
+                            # first blocking frontier in LCU/dep insertion
+                            # order (identical in both engines); its data
+                            # on a slow wire right now -> link-delay
+                            cat = obs_stalls.DRAINED   # overwritten below
+                            for v_, frd in st.frontiers.items():
+                                for sp_, fr_ in frd.items():
+                                    if fr_.safe(it):
+                                        continue
+                                    if obs_stalls.in_flight(delayed.get(
+                                            (core_id, img, v_, sp_)), cycle):
+                                        cat = obs_stalls.LINK_DELAY
+                                    else:
+                                        cat = obs_stalls.dep_key(v_, sp_)
+                                    break
+                                else:
+                                    continue
+                                break
+                        stall_counts[core_id][cat] += 1
                     continue
                 if schedule == "sequential" and not self._producers_done(
                         cfg, img, core_done, gcu_done):
+                    if stalls:
+                        if failed[img]:
+                            cat = obs_stalls.FAILED
+                        else:
+                            # first not-yet-done producer in LCU/dep order
+                            cat = obs_stalls.DRAINED   # overwritten below
+                            part_core = self.progs[
+                                self.tenant_of_core[core_id]].mapping
+                            for v_, lc_ in cfg.lcu.items():
+                                for dp_ in lc_.deps:
+                                    sp_ = dp_.src_partition
+                                    if sp_ == -1:
+                                        if img in gcu_done:
+                                            continue
+                                    elif core_done[(part_core[sp_], img)]:
+                                        continue
+                                    cat = obs_stalls.dep_key(v_, sp_)
+                                    break
+                                else:
+                                    continue
+                                break
+                        stall_counts[core_id][cat] += 1
                     continue
                 msgs = self._execute_iteration(cfg, st, it, img, cycle,
-                                               stats)
+                                               stats, delayed=delayed,
+                                               trace=trace)
+                if trace is not None:
+                    trace.add_exec(core_id, img, cycle)
                 inflight.extend(msgs)
                 stats.messages += len(msgs)
                 stats.bytes_sent += sum(m.payload.nbytes for m in msgs)
@@ -697,6 +816,15 @@ class Simulator:
 
             if all(c or f for c, f in zip(img_complete, failed)):
                 stats.cycles = cycle + 1
+                if stalls:
+                    stats.stalls = obs_stalls.StallBreakdown(
+                        cycles=stats.cycles,
+                        busy={cid: stats.busy.get(cid, 0)
+                              for cid in self.cores_merged},
+                        stalls={cid: dict(stall_counts[cid])
+                                for cid in self.cores_merged},
+                        stage_of_core=self.stage_of_core(),
+                        gcu_busy=gcu_busy)
                 return outputs, stats
             waiting_arrival = any(not started[i] and not failed[i]
                                   and plan.arrivals[i] > cycle
@@ -814,7 +942,8 @@ class Simulator:
 
     def _execute_iteration(self, cfg: CoreConfig, st: _CoreImageState,
                            it: Point, img: int, cycle: int,
-                           stats: Optional[SimStats] = None) -> List[Message]:
+                           stats: Optional[SimStats] = None,
+                           delayed=None, trace=None) -> List[Message]:
         if self.check_raw and cfg.lcu:
             self._raw_check(cfg, st, it)
         env: Dict[str, np.ndarray] = {}
@@ -973,6 +1102,16 @@ class Simulator:
                         ls.messages += 1
                         ls.bytes += payload.nbytes
                         ls.busy += self._occupancy(link, payload.nbytes)
+                    if delayed is not None and delay > 0:
+                        # multi-cycle flight: feeds the link-delay stall
+                        # predicate (open interval send < t < arrive)
+                        delayed[(dst, img, spec.value, cfg.partition_idx)] \
+                            .append((cycle, cycle + 1 + delay))
+                    if trace is not None:
+                        trace.add_link(key, spec.value, img,
+                                       np.array([cycle]),
+                                       np.array([cycle + 1 + delay]),
+                                       payload.nbytes)
                 msgs.append(Message(cycle + 1 + delay, dst, img, spec.value,
                                     kind, loc, payload.copy(),
                                     src_part=cfg.partition_idx))
@@ -1167,8 +1306,18 @@ _PH_DELIVER, _PH_GCU, _PH_CORE = 0, 1, 2
 
 class _EventEngine:
     def __init__(self, sim: Simulator, images, schedule: str, max_cycles: int,
-                 plan: _RequestPlan):
+                 plan: _RequestPlan, stalls: bool = False, trace=None):
         self.sim = sim
+        # Observability (ISSUE 9).  ``stalls`` keeps two tiny logs —
+        # per-batch (core, image, first counter, exec cycles) and the
+        # delayed-message intervals — from which ``_build_stalls``
+        # reconstructs the reference engine's per-cycle classification
+        # exactly (frontier unlock ramps are time-invariant, so the final
+        # ramp answers "was rank r safe at cycle t" for any t).
+        self.stalls = stalls
+        self.trace = trace
+        self.stall_batches: List[Tuple[int, int, int, np.ndarray]] = []
+        self.delayed: Dict[tuple, List[Tuple[int, int]]] = defaultdict(list)
         self.progs = sim.progs
         self.chip = sim.chip
         self.images = images
@@ -1292,6 +1441,16 @@ class _EventEngine:
         stats = SimStats()
         if self.n_images == 0:
             stats.cycles = 1
+            if self.stalls:
+                # one-cycle empty run: every core idles drained (matches
+                # the reference's cycle-0 classification; dead-at-0 wins)
+                stats.stalls = obs_stalls.StallBreakdown(
+                    cycles=1, busy={cid: 0 for cid in self.cores},
+                    stalls={cid: {obs_stalls.DEAD
+                                  if self.dead_at.get(cid, 1) <= 0
+                                  else obs_stalls.DRAINED: 1}
+                            for cid in self.cores},
+                    stage_of_core=self.sim.stage_of_core(), gcu_busy=0)
             return self.outputs, stats
 
         for cid in self.cores:
@@ -1365,6 +1524,8 @@ class _EventEngine:
         stats.completion_cycle = dict(self.complete_cycle)
         stats.failed_cycle = dict(self.failed_cycle)
         self._replay_high_water(stats)
+        if self.stalls:
+            stats.stalls = self._build_stalls(stats)
         return stats
 
     def _refresh_end(self) -> None:
@@ -1406,6 +1567,140 @@ class _EventEngine:
             for cid in touched:
                 if cnt[cid] > 0 and cur[cid] >= stats.sram_high_water[cid]:
                     stats.sram_high_water[cid] = cur[cid]
+
+    # ----------------------------------------------------- stall attribution
+    # Reconstruction of the reference engine's per-cycle classification.
+    # Nothing here is engine-new information: frontier unlock ramps are
+    # time-invariant (the final ramp answers "was rank r safe at cycle t"
+    # for any t <= t_end), the GCU stream windows/stream order determine
+    # each core's current image per cycle, and the batch log pins which
+    # counter a gap cycle was blocked on.  The result is asserted bit-equal
+    # to the oracle in tests/test_obs.py.
+
+    def _classify_unassigned(self, t: int, tenant: int) -> str:
+        # gcu_done_cycle IS the last-send cycle, i.e. the reference's
+        # gcu_send_end; all predicates filter by <= t, so evaluating the
+        # final dicts post hoc equals the reference's inline partial view
+        return obs_stalls.classify_unassigned(
+            t, tenant, self.n_images, self.plan.arrivals, self.tenants,
+            self.gcu_start, self.gcu_done_cycle, self.failed_cycle)
+
+    def _blocked_category(self, cid: int, core: _EvCore, st, img: int,
+                          ctr: int, t: int) -> str:
+        """Why core ``cid`` did not execute counter ``ctr`` of ``img`` at
+        idle cycle ``t`` — mirrors the reference's phase-3 skip order:
+        failed image, then first blocking frontier (LCU/dep insertion
+        order), then the sequential producer gate."""
+        fc = self.failed_cycle.get(img)
+        if fc is not None and fc <= t:
+            return obs_stalls.FAILED
+        cfg = core.cfg
+        if st is not None and ctr < core.total:
+            rank = int(core.ridx[ctr])
+            probe = np.array([rank], np.int64)
+            for v, frd in st.frontiers.items():
+                for sp, fr in frd.items():
+                    if rank > fr.current_limit:
+                        u = obs_stalls.INF_CYCLE   # never unlocked this run
+                    else:
+                        u = int(fr.unlock_vector(probe)[0])
+                    if u > t:
+                        if obs_stalls.in_flight(
+                                self.delayed.get((cid, img, v, sp)), t):
+                            return obs_stalls.LINK_DELAY
+                        return obs_stalls.dep_key(v, sp)
+        if self.schedule == "sequential":
+            # visible-done cycles per _gate_cycle: a producer finishing at
+            # cycle d is visible at d to later-ordered cores, d+1 otherwise
+            my_order = core.order
+            for v, lc in cfg.lcu.items():
+                for dp in lc.deps:
+                    sp = dp.src_partition
+                    if sp == -1:
+                        dc = self.gcu_done_cycle.get(img)
+                        vis = obs_stalls.INF_CYCLE if dc is None else dc
+                    else:
+                        pc = self.part_core[core.tenant][sp]
+                        dcc = self.done_cycle.get((pc, img))
+                        if dcc is None:
+                            vis = obs_stalls.INF_CYCLE
+                        else:
+                            vis = dcc if self.cores[pc].order < my_order \
+                                else dcc + 1
+                    if vis > t:
+                        return obs_stalls.dep_key(v, sp)
+        raise RuntimeError(
+            f"unattributed stall: core {cid} image {img} counter {ctr} "
+            f"cycle {t}")
+
+    def _build_stalls(self, stats: SimStats) -> "obs_stalls.StallBreakdown":
+        t_end = self.t_end
+        # per-(core, image) executed (counter, cycle) chunks, in exec order
+        ex: Dict[Tuple[int, int], List[Tuple[int, np.ndarray]]] = {}
+        for cid, img, c0, cycles in self.stall_batches:
+            ex.setdefault((cid, img), []).append((c0, cycles))
+        # streams are contiguous [start, last-send] and non-overlapping, so
+        # the per-cycle "GCU streamed" count is the clipped window sum
+        gcu_busy = 0
+        for i, s in self.gcu_start.items():
+            if s <= t_end:
+                gcu_busy += min(self.gcu_done_cycle[i], t_end) - s + 1
+        breakdown: Dict[int, Dict[str, int]] = {}
+        for cid, core in self.cores.items():
+            cats: Dict[str, int] = defaultdict(int)
+            dead = self.dead_at.get(cid)
+            horizon = t_end if dead is None else min(t_end, dead - 1)
+            seq = self.stream_seq[core.tenant]
+            pos, prev_done, t = 0, -1, 0
+            while t <= horizon:
+                img = seq[pos] if pos < len(seq) else None
+                start = 0
+                if img is not None:
+                    # the image is the core's current work item from the
+                    # later of its stream start and the previous retirement
+                    start = max(self.gcu_start[img], prev_done + 1)
+                if img is None or t < start:
+                    cats[self._classify_unassigned(t, core.tenant)] += 1
+                    t += 1
+                    continue
+                done = self.done_cycle.get((cid, img))
+                period_end = horizon if done is None else min(done, horizon)
+                chunks = ex.get((cid, img), [])
+                if chunks:
+                    ctrs = np.concatenate(
+                        [np.arange(c0, c0 + len(cy), dtype=np.int64)
+                         for c0, cy in chunks])
+                    cycs = np.concatenate([cy for _, cy in chunks])
+                else:
+                    ctrs = cycs = np.empty(0, np.int64)
+                st = self.states.get((cid, img))
+                n_ex = len(cycs)
+                j = 0
+                for tt in range(t, period_end + 1):
+                    while j < n_ex and cycs[j] < tt:
+                        j += 1
+                    if j < n_ex and cycs[j] == tt:
+                        continue                    # executed: busy cycle
+                    # blocked on the first not-yet-executed counter at tt
+                    if j < n_ex:
+                        ctr = int(ctrs[j])
+                    else:
+                        ctr = int(ctrs[-1]) + 1 if n_ex else 0
+                    cats[self._blocked_category(cid, core, st, img, ctr,
+                                                tt)] += 1
+                t = period_end + 1
+                if done is not None and done <= horizon:
+                    prev_done = done
+                    pos += 1
+            if dead is not None and dead <= t_end:
+                cats[obs_stalls.DEAD] += t_end - max(dead, 0) + 1
+            breakdown[cid] = dict(cats)
+        return obs_stalls.StallBreakdown(
+            cycles=stats.cycles,
+            busy={cid: stats.busy.get(cid, 0) for cid in self.cores},
+            stalls=breakdown,
+            stage_of_core=self.sim.stage_of_core(),
+            gcu_busy=gcu_busy)
 
     # ------------------------------------------------------------------ GCU
     # The GCU is one shared host DMA: at each decision point it picks the
@@ -1449,6 +1744,8 @@ class _EventEngine:
         self.gcu_log.append((send_cycles, len(gcu.dst_cores)))
         end = int(send_cycles[-1])
         self.gcu_done_cycle[img] = end
+        if self.trace is not None:
+            self.trace.add_gcu(img, tk, t, end)
         # the image becomes the tenant's cores' next work item the cycle its
         # streaming starts (reference phase order: GCU before core exec)
         self.stream_seq[tk].append(img)
@@ -1495,6 +1792,8 @@ class _EventEngine:
             self.img_complete[img] = False
         self.img_failed[img] = True
         self.failed_cycle[img] = t
+        if self.trace is not None:
+            self.trace.add_instant("deadline-failed", t, image=img)
         if img in self.gcu_start:             # started: free its slot now
             self._gcu_retire(t, img)
         else:                                 # unstarted: never admit it
@@ -1932,6 +2231,14 @@ class _EventEngine:
                     self.log_link.append(
                         (key, send[sl_], row_bytes,
                          Simulator._occupancy(eff, row_bytes)))
+                    if self.stalls and eff.transfer_delay(row_bytes) > 0:
+                        # same multi-cycle-flight records the reference's
+                        # emit() keeps for the link-delay predicate
+                        self.delayed[(dst, img, spec.value, src_part)] \
+                            .extend(zip(send[sl_].tolist(), arr.tolist()))
+                    if self.trace is not None:
+                        self.trace.add_link(key, spec.value, img,
+                                            send[sl_], arr, row_bytes)
                     self._push(int(arr[0]), _PH_DELIVER, 0, "stream",
                                _Stream(dst, img, spec.value, kind,
                                        locs if locs is None else locs[sl_],
@@ -1970,6 +2277,10 @@ class _EventEngine:
         self.log_cycle.append(cycles)
         self.log_msgs.append(msgs_it)
         self.log_bytes.append(bytes_it)
+        if self.stalls:
+            self.stall_batches.append((cid, img, c0, cycles))
+        if self.trace is not None:
+            self.trace.add_exec(cid, img, cycles)
 
     # ------------------------------------------------------------ RAW oracle
     def _compile_raw_ops(self, cfg: CoreConfig):

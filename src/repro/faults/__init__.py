@@ -9,7 +9,8 @@ excluded, used by ``runtime.CmServer`` for graceful degradation.
 """
 
 from .planes import FaultyPlane
-from .recovery import RemapResult, RetryPolicy, remap_program
+from .recovery import (RemapResult, RetryPolicy, remap_program,
+                       trace_remap_events)
 from .schedule import (CoreFault, FaultSchedule, LinkFault,
                        sample_schedule)
 
@@ -22,4 +23,5 @@ __all__ = [
     "RetryPolicy",
     "RemapResult",
     "remap_program",
+    "trace_remap_events",
 ]

@@ -153,6 +153,29 @@ def remap_program(graph, chip: ChipSpec = None, mesh: ChipMesh = None,
     return RemapResult(program=prog, cores=cores, n_crossbars=n_xbar)
 
 
+def trace_remap_events(trace, events) -> None:
+    """Emit recovery remap events as trace instants (``repro.obs``).
+
+    One ``remap-ok`` / ``remap-failed`` marker per event at the detection
+    cycle, carrying the tenant, the dead cores and — for successful
+    remaps — the new core set and the crossbar-reprogram bill, so a
+    Perfetto timeline shows exactly when and why the pipeline migrated.
+    """
+    for ev in events:
+        if ev.get("ok"):
+            trace.add_instant("remap-ok", ev["cycle"],
+                              tenant=ev["tenant"],
+                              dead_cores=ev["dead_cores"],
+                              new_cores=ev["new_cores"],
+                              n_crossbars=ev["n_crossbars"],
+                              reprogram_cycles=ev["reprogram_cycles"])
+        else:
+            trace.add_instant("remap-failed", ev["cycle"],
+                              tenant=ev["tenant"],
+                              dead_cores=ev["dead_cores"],
+                              error=ev.get("error", ""))
+
+
 def _remap_mesh(pg, mesh: ChipMesh, excluded: frozenset, quantizer):
     """Migrate the tenant to a contiguous window of untouched chips.
 

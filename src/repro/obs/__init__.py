@@ -1,0 +1,23 @@
+"""Observability layer (ISSUE 9): stall attribution, timeline tracing,
+and serving-runtime telemetry — always deterministic, zero-cost when off.
+
+This package must stay importable without ``repro.core`` (the simulator
+imports it at module level); submodules therefore defer any
+``repro.core`` imports into function bodies.
+"""
+
+from .critical import CriticalPath, critical_path, static_bottleneck
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .stalls import (CATEGORIES, DEAD, DEP_WAIT, DPU_BUSY, DRAINED, FAILED,
+                     GCU_STARVED, INFLIGHT_BOUND, LINK_DELAY, StallBreakdown,
+                     classify_unassigned, dep_key, in_flight)
+from .trace import TraceRecorder
+
+__all__ = [
+    "CATEGORIES", "DEAD", "DEP_WAIT", "DPU_BUSY", "DRAINED", "FAILED",
+    "GCU_STARVED", "INFLIGHT_BOUND", "LINK_DELAY",
+    "Counter", "CriticalPath", "Gauge", "Histogram", "MetricsRegistry",
+    "StallBreakdown", "TraceRecorder",
+    "classify_unassigned", "critical_path", "dep_key", "in_flight",
+    "static_bottleneck",
+]

@@ -24,6 +24,7 @@ per-request latencies, across both simulator engines and repeated runs
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, List, Optional, Sequence
 import numpy as np
 
@@ -33,6 +34,7 @@ from repro.core.lowering import AcceleratorProgram
 from repro.core.mapping import MappingError
 from repro.core.partition import PartitionError
 from repro.core.simulator import LinkStats, SimStats, Simulator
+from repro.obs import MetricsRegistry
 from repro.serve.scheduler import Request
 
 from .workload import rate_sweep
@@ -98,6 +100,7 @@ class ServeReport:
     n_retries: int = 0               # retry attempts re-admitted, all epochs
     remap_events: List[Dict] = dataclasses.field(default_factory=list)
     reprogram_cycles: int = 0        # total crossbar-reprogram penalty paid
+    metrics: Optional[MetricsRegistry] = None   # populated by CmServer.serve
 
     def by_rid(self) -> Dict[int, CmRequest]:
         """Requests keyed by rid (``requests`` itself is in arrival order)."""
@@ -174,6 +177,101 @@ class ServeReport:
             f"goodput={self.goodput:.2f}  retries={self.n_retries}  "
             f"remaps={len(self.remap_events)}")
         return "\n".join(lines)
+
+    def to_row(self) -> Dict[str, float]:
+        """The canonical serving-curve row — the single definition
+        ``load_sweep`` and the serve benchmark consume (the row keys are
+        perf-baseline identity and must not drift)."""
+        return {
+            "achieved_rate": self.achieved_rate,
+            "p50_latency": self.p50,
+            "p99_latency": self.p99,
+            "mean_queue": float(self.queue_delays().mean()),
+            "makespan": self.makespan,
+        }
+
+    def summary(self) -> Dict:
+        """Plain-dict run summary (JSON-safe scalars only)."""
+        out = {
+            "requests": len(self.requests),
+            "succeeded": len(self.successes()),
+            "failed": len(self.failures()),
+            "p50_latency": self.p50,
+            "p99_latency": self.p99,
+            "makespan": self.makespan,
+            "achieved_rate": self.achieved_rate,
+            "goodput": self.goodput,
+            "n_tenants": self.n_tenants,
+            "n_retries": self.n_retries,
+            "n_remaps": len(self.remap_events),
+            "reprogram_cycles": self.reprogram_cycles,
+        }
+        # NaN (no successful traffic) is not valid JSON — null it out
+        for k in ("p50_latency", "p99_latency"):
+            if out[k] != out[k]:
+                out[k] = None
+        return out
+
+    def to_json(self) -> str:
+        """Machine-readable report: summary + per-request rows + the
+        metrics snapshot (when the server attached one)."""
+        reqs = [{
+            "rid": r.rid, "tenant": r.tenant, "priority": r.priority,
+            "arrival": r.arrival, "attempts": r.attempts,
+            "succeeded": r.succeeded,
+            "gcu_start": r.gcu_start, "completion": r.completion,
+            "fail_cycle": r.fail_cycle,
+            "latency_cycles": r.latency_cycles if r.succeeded else None,
+        } for r in self.requests]
+        obj = {"summary": self.summary(), "requests": reqs,
+               "remap_events": self.remap_events,
+               "metrics": self.metrics.snapshot() if self.metrics else None}
+        return json.dumps(obj, sort_keys=True, indent=2)
+
+    def to_table(self) -> str:
+        """``table()`` plus a metrics footer (histogram percentiles pulled
+        from the registry when present)."""
+        lines = [self.table()]
+        if self.metrics is not None:
+            snap = self.metrics.snapshot()
+            cnt = "  ".join(f"{k}={v}"
+                            for k, v in snap["counters"].items())
+            if cnt:
+                lines.append(f"counters: {cnt}")
+            for name, h in snap["histograms"].items():
+                lines.append(
+                    f"{name}: n={h['count']} p50={h['p50']} "
+                    f"p99={h['p99']} max={h['max']}")
+        return "\n".join(lines)
+
+
+class _RidTrace:
+    """Per-epoch trace adapter: the simulator labels work by *epoch-local
+    image index*, which collides across retry epochs; this relabels every
+    image to its request id so one recorder accumulates a coherent
+    whole-serve timeline."""
+
+    def __init__(self, inner, rids: List[int]) -> None:
+        self._inner = inner
+        self._rids = rids
+
+    def add_exec(self, core_id, image, cycles):
+        self._inner.add_exec(core_id, self._rids[image], cycles)
+
+    def add_gcu(self, image, tenant, start, end):
+        self._inner.add_gcu(self._rids[image], tenant, start, end)
+
+    def add_link(self, link_key, value, image, sends, arrives, nbytes):
+        self._inner.add_link(link_key, value, self._rids[image],
+                             sends, arrives, nbytes)
+
+    def add_instant(self, name, ts, **args):
+        if "image" in args:
+            args["image"] = self._rids[args["image"]]
+        self._inner.add_instant(name, ts, **args)
+
+    def add_span(self, name, tid, start, end, **args):
+        self._inner.add_span(name, tid, start, end, **args)
 
 
 class CmServer:
@@ -253,6 +351,7 @@ class CmServer:
         self.sim = self._build_sim()
         self.pending: List[CmRequest] = []
         self._next_rid = 0
+        self.metrics = MetricsRegistry()   # replaced per serve (pull-style)
 
     def _build_sim(self) -> Simulator:
         """(Re)build the joint simulator from the current tenant programs —
@@ -290,12 +389,13 @@ class CmServer:
         return self.submit(req)
 
     # --------------------------------------------------------------- serving
-    def drain(self) -> ServeReport:
+    def drain(self, *, stalls: bool = False, trace=None) -> ServeReport:
         """Simulate all pending requests to completion and clear the queue."""
         reqs, self.pending = self.pending, []
-        return self.serve(reqs)
+        return self.serve(reqs, stalls=stalls, trace=trace)
 
-    def serve(self, requests: Sequence[CmRequest]) -> ServeReport:
+    def serve(self, requests: Sequence[CmRequest], *,
+              stalls: bool = False, trace=None) -> ServeReport:
         """Cycle-accurate serving of ``requests`` (re-runnable; the server
         holds no cross-run simulator state beyond remapped programs).
 
@@ -310,6 +410,17 @@ class CmServer:
         same absolute cycle timeline.  Each retry epoch simulates only the
         retried requests — already-completed requests keep their timings
         from the epoch that completed them.
+
+        Observability (both default-off and zero-cost when off):
+        ``stalls=True`` threads stall attribution through the simulator;
+        the ``StallBreakdown`` survives on ``report.stats`` for
+        single-epoch runs (retry epochs re-run the clock, so per-epoch
+        breakdowns do not merge).  ``trace=TraceRecorder()`` records the
+        whole serve — core/GCU/link activity labelled by *request id*
+        (coherent across retry epochs), request lifecycle spans
+        (``queued`` / ``service`` / ``retry-wait``), and fault/remap
+        instants.  Every serve also attaches a fresh
+        :class:`~repro.obs.MetricsRegistry` to ``report.metrics``.
         """
         if not requests:
             raise ValueError("no requests to serve")
@@ -347,11 +458,13 @@ class CmServer:
                                      else self.deadline)) is None
                     else eff[r.rid] + rel
                     for r in batch]
+            epoch_trace = None if trace is None \
+                else _RidTrace(trace, [r.rid for r in batch])
             outputs, stats = self.sim.run(
                 images, schedule=self.schedule, max_cycles=self.max_cycles,
                 arrivals=arrivals, tenants=tenants,
                 max_inflight=self.max_inflight, priorities=priorities,
-                deadlines=deadlines)
+                deadlines=deadlines, stalls=stalls, trace=epoch_trace)
             merged = stats if merged is None else _merge_stats(merged, stats)
             failed_now = []
             for i, r in enumerate(batch):
@@ -373,8 +486,12 @@ class CmServer:
             # failure detection: the deadline cycle is when the server can
             # *know* — recovery decisions use only cores dead by then
             detect = max(r.fail_cycle for r in failed_now)
+            n_prev = len(remap_events)
             ready, paid = self._recover(detect, remap_events)
             reprogram_total += paid
+            if trace is not None and len(remap_events) > n_prev:
+                from repro.faults.recovery import trace_remap_events
+                trace_remap_events(trace, remap_events[n_prev:])
             retry_batch = []
             if self.retry is not None:
                 for r in failed_now:
@@ -383,16 +500,54 @@ class CmServer:
                     r.attempts += 1
                     eff[r.rid] = max(
                         r.fail_cycle + self.retry.backoff(r.attempts), ready)
+                    if trace is not None:
+                        trace.add_span("retry-wait", r.rid, r.fail_cycle,
+                                       eff[r.rid] - 1, attempt=r.attempts)
                     retry_batch.append(r)
                 n_retries += len(retry_batch)
             if not retry_batch:
                 break
             active = retry_batch
-        return ServeReport(requests=list(ordered), stats=merged,
-                           n_tenants=self.n_tenants,
-                           n_retries=n_retries,
-                           remap_events=remap_events,
-                           reprogram_cycles=reprogram_total)
+        if trace is not None:
+            for r in ordered:
+                if r.gcu_start is not None and r.gcu_start > r.arrival:
+                    trace.add_span("queued", r.rid, r.arrival,
+                                   r.gcu_start - 1, rid=r.rid)
+                if r.succeeded:
+                    trace.add_span("service", r.rid, r.gcu_start,
+                                   r.completion, rid=r.rid, tenant=r.tenant)
+                else:
+                    trace.add_instant("request-failed",
+                                      r.fail_cycle if r.fail_cycle is not None
+                                      else r.arrival, rid=r.rid)
+        report = ServeReport(requests=list(ordered), stats=merged,
+                             n_tenants=self.n_tenants,
+                             n_retries=n_retries,
+                             remap_events=remap_events,
+                             reprogram_cycles=reprogram_total)
+        report.metrics = self._collect_metrics(report)
+        self.metrics = report.metrics      # last-serve registry, pull-style
+        return report
+
+    def _collect_metrics(self, report: ServeReport) -> MetricsRegistry:
+        """Fold one serve's outcome into a fresh registry (cycle units)."""
+        m = MetricsRegistry()
+        m.counter("requests_total").inc(len(report.requests))
+        m.counter("requests_succeeded").inc(len(report.successes()))
+        m.counter("requests_failed").inc(len(report.failures()))
+        m.counter("retries_total").inc(report.n_retries)
+        m.counter("remaps_ok_total").inc(
+            sum(1 for e in report.remap_events if e.get("ok")))
+        m.counter("remaps_failed_total").inc(
+            sum(1 for e in report.remap_events if not e.get("ok")))
+        m.counter("reprogram_cycles_total").inc(report.reprogram_cycles)
+        m.gauge("makespan_cycles").set(report.stats.cycles)
+        m.gauge("tenants").set(report.n_tenants)
+        for r in report.successes():
+            m.histogram("queue_cycles").observe(r.queue_cycles)
+            m.histogram("service_cycles").observe(r.service_cycles)
+            m.histogram("latency_cycles").observe(r.latency_cycles)
+        return m
 
     def _recover(self, detect: int, remap_events: List[Dict]):
         """Remap every tenant whose current program touches a core known
@@ -497,14 +652,7 @@ def load_sweep(server: CmServer, images: Sequence[np.ndarray],
     rows = []
     for rate, arr in rate_sweep(rates, len(images), kind=kind, seed=seed):
         rep = server.serve_images(images, arrivals=arr, tenants=tenants)
-        rows.append({
-            "offered_rate": float(rate),
-            "achieved_rate": rep.achieved_rate,
-            "p50_latency": rep.p50,
-            "p99_latency": rep.p99,
-            "mean_queue": float(rep.queue_delays().mean()),
-            "makespan": rep.makespan,
-        })
+        rows.append({"offered_rate": float(rate), **rep.to_row()})
     return rows
 
 

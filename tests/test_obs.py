@@ -1,0 +1,332 @@
+"""Observability layer (ISSUE 9): stalls, traces, telemetry.
+
+Contracts under test:
+  * **zero-cost off switch** — ``run(trace=None, stalls=False)`` (the
+    default) is bitwise identical to a run with observability on: same
+    outputs, same counters; tracing must never perturb the timing model;
+  * **accounting identity** — per core, ``busy + sum(stall categories)
+    == total run cycles``, checked for every attributed run;
+  * **engine equality** — the event engine's reconstructed
+    ``StallBreakdown`` is bit-equal to the reference engine's per-cycle
+    oracle across schedules, replication, multi-chip meshes and faults;
+  * **byte-determinism** — same-seed runs serialize byte-identical trace
+    files, and both engines serialize the *same* bytes;
+  * **critical path** — ``critical_path`` names the stage the
+    partitioner's static cost model (``static_bottleneck``) targets;
+  * **serving telemetry** — ``CmServer.serve`` populates the metrics
+    registry consistently with the report, ``to_json``/``to_table`` are
+    well-formed, and fault recovery shows up as remap/retry trace events.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Simulator, build_lenet_like,
+                        build_resnet_block_chain, compile_model, make_chip)
+from repro.faults import CoreFault, FaultSchedule, LinkFault, RetryPolicy
+from repro.obs import (DEAD, FAILED, GCU_STARVED, LINK_DELAY, Histogram,
+                       MetricsRegistry, StallBreakdown, TraceRecorder,
+                       critical_path, dep_key, in_flight, static_bottleneck)
+from repro.runtime import CmServer
+
+ENGINES = ("reference", "event")
+
+
+def _images(n, shape=(1, 12, 12), seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=shape).astype(np.float32) for _ in range(n)]
+
+
+def _stat_tuple(s):
+    return (s.cycles, s.messages, s.bytes_sent, dict(s.busy),
+            dict(s.first_busy), dict(s.last_busy), dict(s.sram_high_water),
+            dict(s.gcu_start_cycle), dict(s.completion_cycle),
+            dict(s.failed_cycle),
+            {k: (v.messages, v.bytes, v.busy) for k, v in s.links.items()})
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all")
+    return g, chip, compile_model(g, chip)
+
+
+@pytest.fixture(scope="module")
+def mesh2():
+    g = build_resnet_block_chain(4)
+    chip = make_chip(6, "banded")
+    return g, chip, compile_model(g, chip, chips=2)
+
+
+# ----------------------------------------------------------- primitive units
+def test_dep_key_and_in_flight():
+    assert dep_key("conv1:out", 2) == "dep-wait:conv1:out:p2"
+    assert dep_key("x", -1) == GCU_STARVED
+    # open interval: a message in the air at t, not its send/arrive cycles
+    assert in_flight([(10, 14)], 12)
+    assert not in_flight([(10, 14)], 10)
+    assert not in_flight([(10, 14)], 14)
+    assert not in_flight(None, 12)
+    assert not in_flight([], 12)
+
+
+def test_breakdown_accounting_check():
+    ok = StallBreakdown(cycles=10, busy={0: 4},
+                        stalls={0: {GCU_STARVED: 6}}, stage_of_core={0: "a"})
+    ok.check()
+    bad = StallBreakdown(cycles=10, busy={0: 4},
+                         stalls={0: {GCU_STARVED: 5}}, stage_of_core={0: "a"})
+    with pytest.raises(AssertionError, match="core 0"):
+        bad.check()
+    assert ok.total(GCU_STARVED) == 6
+    assert ok.by_stage()["a"]["busy"] == 4
+
+
+def test_histogram_and_registry():
+    h = Histogram()
+    for v in (5, 1, 3):
+        h.observe(v)
+    assert (h.count, h.total, h.percentile(0), h.percentile(100)) \
+        == (3, 9, 1, 5)
+    assert h.percentile(50) == 3
+    m = MetricsRegistry()
+    m.counter("a").inc(2)
+    m.counter("a").inc()
+    m.gauge("g").set(7)
+    m.histogram("h").observe(4)
+    snap = m.snapshot()
+    assert snap["counters"] == {"a": 3}
+    assert snap["gauges"] == {"g": 7}
+    assert snap["histograms"]["h"]["count"] == 1
+    assert json.loads(m.to_json()) == snap
+
+
+# --------------------------------------------------- zero-cost off contract
+@pytest.mark.parametrize("engine", ENGINES)
+def test_observability_off_is_bitwise_free(lenet, engine):
+    _, chip, prog = lenet
+    images = _images(3)
+    sim = Simulator(prog, chip, engine=engine)
+    o_plain, s_plain = sim.run(images)
+    o_obs, s_obs = sim.run(images, stalls=True, trace=TraceRecorder())
+    assert s_plain.stalls is None
+    assert _stat_tuple(s_plain) == _stat_tuple(s_obs)
+    for a, b in zip(o_plain, o_obs):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+# ------------------------------------------- engine-equality + accounting
+def _breakdown_pair(prog, chip, images, **kw):
+    out = []
+    for engine in ENGINES:
+        sim = Simulator(prog, chip, engine=engine)
+        _, stats = sim.run(images, stalls=True, **kw)
+        stats.stalls.check()          # busy + sum(stalls) == run cycles
+        out.append(stats.stalls)
+    return out
+
+
+@pytest.mark.parametrize("schedule", ("pipelined", "sequential"))
+def test_breakdown_engine_equality(lenet, schedule):
+    _, chip, prog = lenet
+    ref, ev = _breakdown_pair(prog, chip, _images(3), schedule=schedule)
+    assert ref == ev
+    assert ref.gcu_busy > 0
+
+
+def test_breakdown_engine_equality_admission(lenet):
+    g, chip, _ = lenet
+    prog = compile_model(g, chip)
+    ref, ev = _breakdown_pair(prog, chip, _images(4),
+                              arrivals=[0, 50, 60, 200],
+                              max_inflight=2)
+    assert ref == ev
+
+
+def test_breakdown_engine_equality_replicated(lenet):
+    g, chip, _ = lenet
+    prog = compile_model(g, chip, replicate={"conv1": 2})
+    ref, ev = _breakdown_pair(prog, chip, _images(4))
+    assert ref == ev
+    # replica stalls name the specific blocking producer partition
+    deps = {c for per in ref.stalls.values() for c in per
+            if c.startswith("dep-wait:")}
+    assert deps, ref.stalls
+
+
+def test_breakdown_engine_equality_mesh_faults(mesh2):
+    _, chip, prog = mesh2
+    from repro.core import make_mesh
+    mesh = make_mesh(2, chip=chip)
+    images = _images(4, shape=(4, 8, 8))
+    victim = sorted(prog.cores)[2]
+    cases = [
+        (None, None),
+        (FaultSchedule(core_faults=(CoreFault(victim, cycle=150),),
+                       link_faults=(LinkFault(0, 1, 100, latency_add=6),)),
+         [a + 400 for a in (0, 0, 0, 0)]),
+    ]
+    for faults, deadlines in cases:
+        pair = []
+        for engine in ENGINES:
+            sim = Simulator(prog, mesh, engine=engine, faults=faults)
+            _, stats = sim.run(images, deadlines=deadlines, stalls=True)
+            stats.stalls.check()
+            pair.append(stats.stalls)
+        assert pair[0] == pair[1]
+    # the faulted run attributed dead and failed cycles somewhere
+    assert pair[0].total(DEAD) > 0
+    assert pair[0].total(FAILED) > 0
+    assert pair[0].total(LINK_DELAY) > 0
+
+
+# ----------------------------------------------------------- trace contract
+def test_trace_byte_identical_across_runs_and_engines(lenet, tmp_path):
+    _, chip, prog = lenet
+    images = _images(3)
+    blobs = {}
+    for engine in ENGINES:
+        paths = []
+        for rep in range(2):
+            tr = TraceRecorder()
+            sim = Simulator(prog, chip, engine=engine)
+            _, stats = sim.run(images, trace=tr)
+            p = tmp_path / f"{engine}{rep}.json"
+            tr.write(str(p), stats.cycles - 1, sim.stage_of_core())
+            paths.append(p.read_bytes())
+        assert paths[0] == paths[1], f"{engine}: same-seed bytes differ"
+        blobs[engine] = paths[0]
+    assert blobs["reference"] == blobs["event"]
+    obj = json.loads(blobs["event"])
+    assert obj["metadata"]["clock"] == "simulated-cycles"
+    phases = {e["ph"] for e in obj["traceEvents"]}
+    assert phases == {"M", "X"}
+
+
+def test_trace_viewer_roundtrip(lenet, tmp_path):
+    repo = Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "trace_viewer", repo / "tools" / "trace_viewer.py")
+    tv = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(tv)
+
+    _, chip, prog = lenet
+    tr = TraceRecorder()
+    sim = Simulator(prog, chip)
+    _, stats = sim.run(_images(2), trace=tr)
+    p = tmp_path / "t.json"
+    tr.write(str(p), stats.cycles - 1, sim.stage_of_core())
+    obj = tv.load(str(p))
+    assert tv.validate(obj) == []
+    assert "busiest tracks" in tv.summarize(obj)
+    out = tmp_path / "canon.json"
+    tv.export(obj, str(out))
+    assert out.read_bytes() == p.read_bytes()   # writer is already canonical
+
+
+# ----------------------------------------------------------- critical path
+def test_critical_path_matches_static_plan():
+    g = build_lenet_like()
+    chip = make_chip(8, "all_to_all", dma_pixels_per_cycle=4)
+    prog = compile_model(g, chip)
+    sim = Simulator(prog, chip)
+    _, stats = sim.run(_images(4), stalls=True)
+    cp = critical_path(stats)
+    assert cp.kind == "stage"
+    assert cp.name == static_bottleneck(prog.pgraph,
+                                        chip.dma_pixels_per_cycle)
+    assert 0.0 < cp.utilization <= 1.0
+    assert cp.ranking[0][2] >= cp.ranking[-1][2]
+    assert "rank" in cp.table()
+
+
+def test_critical_path_matches_static_plan_tiny_xfmr():
+    # tiny_xfmr is a balanced pipeline: several stages (and, at dma=1,
+    # the GCU stream) tie for max busy.  The cross-check contract under
+    # ties: the static pick must be *a* binding resource — its measured
+    # busy equals the dynamic maximum.
+    from repro.core import build_tiny_transformer
+    g = build_tiny_transformer()
+    chip = make_chip(12, "all_to_all", dma_pixels_per_cycle=1)
+    prog = compile_model(g, chip)
+    sim = Simulator(prog, chip)
+    _, stats = sim.run(_images(6, shape=(8, 4, 1)), stalls=True)
+    cp = critical_path(stats)
+    static = static_bottleneck(prog.pgraph, chip.dma_pixels_per_cycle)
+    busy_of = {name: busy for _, name, busy in cp.ranking}
+    assert busy_of[static] == cp.busy, (static, cp.ranking)
+
+
+def test_critical_path_requires_stalls(lenet):
+    _, chip, prog = lenet
+    _, stats = Simulator(prog, chip).run(_images(1))
+    with pytest.raises(ValueError, match="stalls=True"):
+        critical_path(stats)
+
+
+# ------------------------------------------------------- serving telemetry
+def test_serve_metrics_report_and_trace(lenet):
+    g, chip, _ = lenet
+    prog = compile_model(g, chip)
+    srv = CmServer(prog, chip)
+    images = _images(4)
+    tr = TraceRecorder()
+    rep = srv.serve_images(images, arrivals=[0, 30, 60, 90])
+    # metrics agree with the report
+    snap = rep.metrics.snapshot()
+    assert snap["counters"]["requests_total"] == 4
+    assert snap["counters"]["requests_succeeded"] == len(rep.successes())
+    assert snap["histograms"]["latency_cycles"]["count"] == 4
+    assert snap["gauges"]["makespan_cycles"] == rep.makespan
+    assert srv.metrics is rep.metrics
+    # well-formed report exports
+    obj = json.loads(rep.to_json())
+    assert obj["summary"]["requests"] == 4
+    assert len(obj["requests"]) == 4
+    assert obj["metrics"] == snap
+    assert "counters:" in rep.to_table()
+    # traced serve: request lifecycle spans labelled by rid
+    for r in rep.requests:
+        r.done = False
+    rep2 = srv.serve(list(rep.requests), stalls=True, trace=tr)
+    assert [r.completion for r in rep2.requests] \
+        == [r.completion for r in rep.requests]
+    names = {e["name"] for e in
+             tr.finalize(rep2.stats.cycles - 1)["traceEvents"]}
+    assert "service" in names
+    assert rep2.stats.stalls is not None       # single epoch: preserved
+    rep2.stats.stalls.check()
+
+
+def test_serve_fault_recovery_trace_events(lenet):
+    g, chip, _ = lenet
+    prog = compile_model(g, chip)
+    victim = sorted(prog.cores)[1]
+    faults = FaultSchedule(core_faults=(CoreFault(victim, cycle=60),))
+    srv = CmServer(prog, chip, faults=faults, deadline=300,
+                   retry=RetryPolicy(max_retries=2, backoff_cycles=16))
+    tr = TraceRecorder()
+    rep = srv.serve_images(_images(3), arrivals=[0, 40, 80])
+    # re-serve traced (serve resets verdicts, so reports must agree)
+    srv2 = CmServer(prog, chip, faults=faults, deadline=300,
+                    retry=RetryPolicy(max_retries=2, backoff_cycles=16))
+    rep2 = srv2.serve(list(rep.requests), trace=tr)
+    assert [r.completion for r in rep2.requests] \
+        == [r.completion for r in rep.requests]
+    assert rep2.n_retries > 0 and rep2.remap_events
+    names = {e["name"] for e in
+             tr.finalize(rep2.stats.cycles - 1)["traceEvents"]}
+    assert {"remap-ok", "retry-wait", "service", "deadline-failed"} <= names
+    snap = rep2.metrics.snapshot()
+    assert snap["counters"]["retries_total"] == rep2.n_retries
+    assert snap["counters"]["remaps_ok_total"] == 1
+    assert snap["counters"]["reprogram_cycles_total"] \
+        == rep2.reprogram_cycles

@@ -19,6 +19,14 @@ an ``x.T`` attribute, or a ``.transpose()`` / ``.swapaxes()`` /
 is a convention check, not an alias analysis; wrapping at the producer
 and passing the name is fine.
 
+A second, scoped rule guards the observability determinism contract
+(ISSUE 9): ``core/simulator.py`` and everything under ``obs/`` must never
+read a wall clock — simulated cycles are the only clock, and same-seed
+runs must serialize byte-identical traces.  Any ``time.time()`` /
+``perf_counter()`` / ``monotonic()``-family call in those files is a
+violation (benchmarks measure wall time *around* the simulator, never
+inside it).
+
 Usage: ``python tools/lint_contiguity.py [paths...]`` (defaults to
 ``src/`` and ``benchmarks/``).  Exits 1 when violations are found.
 """
@@ -36,6 +44,25 @@ PLANE_FUNCS = frozenset({"mxv_one", "mxv_batch", "dyn_mxv_one",
 
 #: ndarray methods that (can) return strided or re-laid-out views.
 VIEW_METHODS = frozenset({"transpose", "swapaxes", "reshape"})
+
+#: Wall-clock readers forbidden inside the deterministic simulator/trace
+#: scope (``time`` module names, matched as ``time.<attr>()`` or as bare
+#: ``from time import ...`` calls).
+WALLCLOCK_FUNCS = frozenset({"time", "perf_counter", "monotonic",
+                             "process_time", "time_ns", "perf_counter_ns",
+                             "monotonic_ns", "process_time_ns"})
+
+
+def _is_deterministic_scope(filename: str) -> bool:
+    f = filename.replace("\\", "/")
+    return f.endswith("core/simulator.py") or "/obs/" in f
+
+
+def _is_wallclock_call(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr in WALLCLOCK_FUNCS:
+        return isinstance(f.value, ast.Name) and f.value.id == "time"
+    return isinstance(f, ast.Name) and f.id in WALLCLOCK_FUNCS
 
 
 def _callee_name(call: ast.Call) -> str:
@@ -104,9 +131,16 @@ def lint_source(src: str, filename: str) -> List[Tuple[str, int, str]]:
     except SyntaxError as e:
         return [(filename, e.lineno or 0, f"syntax error: {e.msg}")]
     out: List[Tuple[str, int, str]] = []
+    wallclock_scope = _is_deterministic_scope(filename)
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
             continue
+        if wallclock_scope and _is_wallclock_call(node):
+            out.append((
+                filename, node.lineno,
+                f"wall-clock call {_callee_name(node)}() in deterministic "
+                "simulator/observability code; simulated cycles are the "
+                "only clock here (traces must be byte-reproducible)"))
         callee = _callee_name(node)
         if callee != "einsum" and callee not in PLANE_FUNCS:
             continue

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Inspect / validate / re-export simulator trace files.
+
+``repro.obs.TraceRecorder.write`` emits Chrome Trace Event Format JSON
+(Perfetto-compatible; ``ts``/``dur`` are *simulated cycles*).  This tool
+is the command-line companion:
+
+  summary   (default) per-process event counts, busiest core spans, GCU
+            occupancy, link bursts, request lifecycle totals
+  validate  structural checks: events sorted, spans within ``t_end``,
+            required fields present — exits 1 on violation
+  export    re-serialize canonically (sorted keys, compact separators) to
+            ``--out``; byte-stable, so two traces can be diffed/compared
+            with ``cmp``
+
+Usage::
+
+    python tools/trace_viewer.py TRACE.json [summary|validate]
+    python tools/trace_viewer.py TRACE.json export --out canon.json
+
+Everything here is read-only over the JSON — no repro imports — so the
+tool also works on traces produced by other Chrome-trace writers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path) as fh:
+        obj = json.load(fh)
+    if "traceEvents" not in obj:
+        raise ValueError(f"{path}: not a Chrome-trace file "
+                         "(no traceEvents key)")
+    return obj
+
+
+def _names(obj: Dict[str, Any]) -> Dict[int, str]:
+    """pid -> process name from the 'M' metadata events."""
+    out: Dict[int, str] = {}
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            out[ev["pid"]] = ev["args"]["name"]
+    return out
+
+
+def summarize(obj: Dict[str, Any]) -> str:
+    """Human-readable digest of one trace file."""
+    pid_name = _names(obj)
+    t_end = obj.get("metadata", {}).get("t_end")
+    counts: Dict[str, int] = defaultdict(int)
+    busy: Dict[str, int] = defaultdict(int)      # per (process, tid) cycles
+    lines = [f"t_end: {t_end} cycles"
+             if t_end is not None else "t_end: (missing)"]
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "M":
+            continue
+        proc = pid_name.get(ev.get("pid"), str(ev.get("pid")))
+        counts[f"{proc}/{ev['ph']}"] += 1
+        if ev.get("ph") == "X":
+            busy[f"{proc}:{ev.get('tid')}"] += int(ev.get("dur", 0))
+    lines.append("event counts:")
+    for key in sorted(counts):
+        lines.append(f"  {key:<16} {counts[key]}")
+    lines.append("busiest tracks (occupied cycles):")
+    top = sorted(busy.items(), key=lambda kv: (-kv[1], kv[0]))[:12]
+    for key, cyc in top:
+        util = f" ({cyc / (t_end + 1):.1%})" if t_end else ""
+        lines.append(f"  {key:<16} {cyc}{util}")
+    return "\n".join(lines)
+
+
+def validate(obj: Dict[str, Any]) -> List[str]:
+    """Structural violations (empty list = valid)."""
+    errs: List[str] = []
+    t_end = obj.get("metadata", {}).get("t_end")
+    prev_ts = None
+    for i, ev in enumerate(obj["traceEvents"]):
+        for field in ("ph", "pid", "tid", "ts", "name"):
+            if field not in ev:
+                errs.append(f"event {i}: missing field {field!r}")
+        ts = ev.get("ts")
+        if ts is None:
+            continue
+        if ts < 0:
+            errs.append(f"event {i} ({ev.get('name')}): negative ts {ts}")
+        if prev_ts is not None and ts < prev_ts:
+            errs.append(f"event {i} ({ev.get('name')}): ts {ts} < "
+                        f"previous {prev_ts} (events must be sorted)")
+        prev_ts = ts
+        if t_end is not None and ev.get("ph") == "X":
+            if ts + ev.get("dur", 1) - 1 > t_end:
+                errs.append(f"event {i} ({ev.get('name')}): span end "
+                            f"{ts + ev.get('dur', 1) - 1} > t_end {t_end}")
+    return errs
+
+
+def export(obj: Dict[str, Any], out_path: str) -> None:
+    """Canonical re-serialization (byte-stable: sorted keys, compact)."""
+    with open(out_path, "w") as fh:
+        json.dump(obj, fh, sort_keys=True, separators=(",", ":"))
+        fh.write("\n")
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file")
+    ap.add_argument("command", nargs="?", default="summary",
+                    choices=("summary", "validate", "export"))
+    ap.add_argument("--out", default=None,
+                    help="output path (export)")
+    args = ap.parse_args(argv)
+    obj = load(args.trace)
+    if args.command == "summary":
+        print(summarize(obj))
+        return 0
+    if args.command == "validate":
+        errs = validate(obj)
+        for e in errs:
+            print(e)
+        print(f"{args.trace}: " + ("INVALID" if errs else "valid")
+              + f" ({len(obj['traceEvents'])} events)")
+        return 1 if errs else 0
+    if not args.out:
+        ap.error("export needs --out")
+    export(obj, args.out)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
