@@ -1,0 +1,98 @@
+"""Benchmark: the design-space autotuner (ISSUE 10).
+
+Two kinds of rows, all deterministic (seeded search, seeded workload, no
+wall-clock measurements — every perf field is a simulated cycle count):
+
+  * ``mode=headline`` — one row per committed ``configs/tuned/`` artifact:
+    the tuned config and the ``replicate="auto"`` heuristic compiled and
+    simulated side by side on the artifact's recorded workload.  Asserts
+    the tuned config beats-or-ties auto AND that the artifact's recorded
+    score still reproduces exactly — if either drifts, the bench fails
+    (and ``run.py --check`` pins the cycle counts against the committed
+    baseline on top).
+  * ``mode=trajectory`` — one row per trial of a small fixed lenet
+    search: where each candidate left the funnel (compile-error /
+    prefilter-discard / ranked-out / simulated) and at what score.  The
+    committed rows are the reference search trace; any change to search
+    order or funnel accounting shows up as an unmatched-row diff.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Simulator, compile_model
+from repro.tune import (SearchSpace, TuneConfig, TuneWorkload, ZOO,
+                        autotune, load_tuned)
+
+
+def _simulate(prog_like, chip, graph, workload):
+    rng = np.random.default_rng(workload.seed)
+    shape = tuple(int(x) for x in graph.values[graph.inputs[0]].shape)
+    images = [rng.normal(size=shape).astype(np.float32)
+              for _ in range(workload.n_images)]
+    sim = Simulator(prog_like, chip, check_raw=False, engine="event",
+                    compute_plane="numpy")
+    _, stats = sim.run(images, schedule=workload.schedule)
+    return int(stats.cycles)
+
+
+def _headline(name):
+    entry = ZOO[name]
+    art = load_tuned(name)
+    graph, chip = entry.build(), entry.chip()
+    tuned_prog = compile_model(graph, chip, tune=name)
+    tuned = _simulate(tuned_prog, chip, graph, entry.workload)
+    auto_prog = compile_model(entry.build(), chip, replicate="auto")
+    auto = _simulate(auto_prog, chip, entry.build(), entry.workload)
+    if tuned != art["cycles"]:
+        raise AssertionError(
+            f"{name}: tuned config simulates to {tuned} cycles but the "
+            f"committed artifact recorded {art['cycles']} — the timing "
+            f"model or the config loader drifted; re-record the artifact")
+    if tuned > auto:
+        raise AssertionError(
+            f"{name}: tuned config ({tuned} cycles) lost to "
+            f"replicate='auto' ({auto} cycles) — the committed artifact "
+            f"is stale; re-run `python -m repro.tune --model {name} "
+            f"--write`")
+    return {"bench": "tune", "mode": "headline", "case": name,
+            "tuned_cycles": tuned, "auto_cycles": auto,
+            "chips": art["config"]["chips"],
+            "config": TuneConfig.from_json_dict(art["config"]).key()}
+
+
+def _trajectory():
+    entry = ZOO["lenet"]
+    result = autotune(
+        entry.build(), entry.chip(),
+        TuneWorkload(n_images=4, schedule="pipelined", seed=0),
+        budget=10, seed=0,
+        space=SearchSpace(max_repl_k=16, batch=6, shortlist=2),
+        label="lenet")
+    rows = []
+    for t in result.trials:
+        rows.append({"bench": "tune", "mode": "trajectory", "case": "lenet",
+                     "trial": t.index, "stage": t.stage,
+                     "provenance": t.provenance, "config": t.config.key(),
+                     "cycles": t.cycles if t.cycles is not None else -1})
+    rows.append({"bench": "tune", "mode": "trajectory-summary",
+                 "case": "lenet", "best": result.best.key(),
+                 "best_cycles": result.best_cycles,
+                 "n_candidates": result.counts["candidates"],
+                 "n_simulated": result.n_simulated})
+    return rows
+
+
+def run(smoke: bool = False):
+    """Same cases in smoke and full mode — the whole bench is a few
+    compiles plus ~15 small event-engine runs, and identical rows keep
+    the committed baseline valid for every CI leg."""
+    rows = [_headline(name) for name in sorted(ZOO)]
+    rows += _trajectory()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -52,6 +52,9 @@ import sys
 #   identity — every other scalar: matches a row to its baseline row
 EXACT_KEYS = ("cycles", "messages", "makespan", "p50_latency", "p99_latency",
               "steps", "prefills", "busy_cores", "pipe_util")
+# wall-clock keys that don't follow the *_ms suffix convention (treating
+# them as identity would make their rows unmatchable run-to-run)
+WALL_KEYS = ("ms_per_step",)
 EXCLUDED_KEYS = ("tok_per_s", "decode_tok_per_s", "loss_drop",
                  "throughput_per_core")
 
@@ -61,7 +64,7 @@ def _is_exact_key(k: str) -> bool:
 
 
 def _is_wall_key(k: str) -> bool:
-    return k.endswith("_ms")
+    return k.endswith("_ms") or k in WALL_KEYS
 
 
 def _is_excluded_key(k: str) -> bool:
@@ -184,12 +187,12 @@ def main() -> None:
 
     from . import (bench_compile, bench_compression, bench_faults,
                    bench_kernels, bench_lcu, bench_pipeline, bench_serve,
-                   bench_train)
+                   bench_train, bench_tune)
     modules = {
         "pipeline": bench_pipeline, "compile": bench_compile,
         "lcu": bench_lcu, "kernels": bench_kernels, "train": bench_train,
         "serve": bench_serve, "compression": bench_compression,
-        "faults": bench_faults,
+        "faults": bench_faults, "tune": bench_tune,
     }
     if args.only:
         wanted = args.only.split(",")
@@ -228,7 +231,14 @@ def main() -> None:
         if args.check:
             base_path = baseline_dir / f"BENCH_{name}.json"
             if not base_path.exists():
-                print(f"  check: no baseline {base_path}, skipped")
+                # a missing baseline is a gate hole, not a pass: every
+                # bench selected for --check must have a committed file
+                regressions.append(
+                    f"{name}: no committed baseline {base_path} — run "
+                    f"`python -m benchmarks.run --only {name}` and commit "
+                    f"the BENCH_{name}.json it writes (or drop {name} "
+                    f"from --only)")
+                print(f"  check: FAIL — baseline {base_path} missing")
                 continue
             baseline = json.loads(base_path.read_text())
             regs, n_cmp, skipped = check_rows(

@@ -16,6 +16,8 @@ Entry point: :func:`verify_program`.  ``repro.core.compiler`` routes
 from .diagnostics import (AnalysisDiagnostic, AnalysisError, AnalysisReport,
                           SEVERITIES)
 from .model import build_model
+from .prefilter import PREFILTER_CHECKS, prefilter_program
+from .resources import image_interval, sram_diagnostics
 from .structural import resolve_chip, structural_diagnostics
 from .verifier import ALL_CHECKS, verify_program
 
@@ -24,9 +26,13 @@ __all__ = [
     "AnalysisDiagnostic",
     "AnalysisError",
     "AnalysisReport",
+    "PREFILTER_CHECKS",
     "SEVERITIES",
     "build_model",
+    "image_interval",
+    "prefilter_program",
     "resolve_chip",
+    "sram_diagnostics",
     "structural_diagnostics",
     "verify_program",
 ]

@@ -114,6 +114,24 @@ def _check_links(prog: AcceleratorProgram, models: List[CoreModel]
     return out, loads
 
 
+def sram_diagnostics(prog: AcceleratorProgram, chip: ChipSpec,
+                     max_inflight: int = 1
+                     ) -> Tuple[List[AnalysisDiagnostic], Dict[int, int]]:
+    """The SRAM half of pass 3, standalone: ``(diagnostics, per-core
+    bound)``.  Needs no static model (O(cores) dict walks), which is what
+    lets :func:`repro.analysis.prefilter_program` screen design-space
+    candidates without paying for relation enumeration."""
+    return _check_sram(prog, chip, max_inflight)
+
+
+def image_interval(prog: AcceleratorProgram, chip: ChipSpec) -> int:
+    """Static steady-state cycles between images — the slowest pipeline
+    stage's per-image service (GCU pixel streaming or the largest per-core
+    residue-local iteration count).  The denominator of the link-load
+    estimate, exposed for the autotuner's static ranking stage."""
+    return _image_interval(prog, chip)
+
+
 def resource_diagnostics(prog: AcceleratorProgram, chip: ChipSpec,
                          models: List[CoreModel], max_inflight: int = 1
                          ) -> Tuple[List[AnalysisDiagnostic],

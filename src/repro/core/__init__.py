@@ -14,8 +14,9 @@ from .hwspec import (ChipMesh, ChipSpec, CoreSpec, LinkSpec, make_chip,
                      make_mesh, subchip, submesh)
 from .lowering import InterChipStream, LcuDep
 from .mapping import MappingError, map_partitions, map_partitions_mesh
-from .partition import (PartitionError, cut_bytes, partition_chips,
-                        partition_graph, plan_replication,
+from .partition import (PartitionError, chip_cuts_of, cut_bytes,
+                        cut_neighbors, partition_chips, partition_graph,
+                        plan_replication, replicable_stages,
                         replicate_partitions)
 from .poly import (HAVE_ISL, FrontierTable, compile_frontier_table,
                    frontier_cache_clear, frontier_cache_enable,
@@ -31,8 +32,9 @@ __all__ = [
     "subchip", "submesh",
     "InterChipStream",
     "MappingError", "map_partitions", "map_partitions_mesh",
-    "PartitionError", "cut_bytes", "partition_chips", "partition_graph",
-    "plan_replication", "replicate_partitions", "LcuDep",
+    "PartitionError", "chip_cuts_of", "cut_bytes", "cut_neighbors",
+    "partition_chips", "partition_graph", "plan_replication",
+    "replicable_stages", "replicate_partitions", "LcuDep",
     "DeadlockError", "LinkStats", "RawViolation", "SimStats", "Simulator",
     "HAVE_ISL", "FrontierTable", "compile_frontier_table",
     "frontier_cache_clear", "frontier_cache_enable", "frontier_cache_stats",

@@ -73,7 +73,8 @@ def validate_program(prog: AcceleratorProgram,
 def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
                   chips: int = 1, mesh: ChipMesh = None,
                   validate: bool = False, analyze: bool = False,
-                  replicate=None) -> AcceleratorProgram:
+                  replicate=None, chip_cuts=None,
+                  tune=None) -> AcceleratorProgram:
     """End-to-end compilation, optionally scaled out to a multi-chip mesh.
 
     ``chips=1`` (default) is the paper's single-chip flow, unchanged.
@@ -96,9 +97,31 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
     ``"auto"`` runs :func:`partition.plan_replication` against the target's
     core budget and GCU stream rate, a ``{node_name: k}`` dict replicates
     the named stages explicitly (round-robin ``i mod k`` iteration split).
+
+    ``chip_cuts`` (mesh flows only) overrides the chip partitioner's DP
+    with explicit contiguous cut boundaries (``partition_chips(cuts=)``).
+
+    ``tune`` applies an autotuned configuration (ISSUE 10): a
+    :class:`repro.tune.TuneConfig`, a ``TuneResult``, a loaded
+    ``configs/tuned/*.json`` artifact, or a path to one.  Its replication
+    plan / chip count / topology / cut points fill any of those arguments
+    not given explicitly (explicit arguments win).
     """
+    if tune is not None:
+        from ..tune import resolve_tuned
+        cfg = resolve_tuned(tune)
+        if replicate is None:
+            replicate = cfg.replicate_plan() or None
+        if mesh is None and chips == 1 and cfg.chips > 1:
+            mesh = make_mesh(cfg.chips, chip=chip, topology=cfg.topology)
+        if chip_cuts is None:
+            chip_cuts = cfg.chip_cuts
     if mesh is None and chips > 1:
         mesh = make_mesh(chips, chip=chip)
+    if chip_cuts is not None and mesh is None:
+        raise PartitionError(
+            "chip_cuts given for a single-chip compile — cut points only "
+            "exist on a mesh (pass chips=N or mesh=)")
     pg = partition_graph(graph)
     if replicate:
         if replicate == "auto":
@@ -113,7 +136,7 @@ def compile_model(graph: Graph, chip: ChipSpec, quantizer=None,
         mapping = map_partitions(pg, chip)
         prog = lower(pg, mapping, quantizer=quantizer)
     else:
-        chip_assign = partition_chips(pg, mesh)
+        chip_assign = partition_chips(pg, mesh, cuts=chip_cuts)
         mapping = map_partitions_mesh(pg, mesh, chip_assign)
         prog = lower(pg, mapping, quantizer=quantizer, mesh=mesh)
     if validate and not analyze:

@@ -21,7 +21,7 @@ receive their operands through the LCU like any cross-partition edge.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 from .graph import BROADCAST_DPU_OPS, CROSSBAR_OPS, Graph, Node
 from .hwspec import ChipMesh
 
@@ -429,6 +429,24 @@ def plan_replication(pg: PartitionedGraph, n_cores: int,
     return {s[0]: s[3] for s in segs if s[3] > 1}
 
 
+# ------------------------------------------- enumerable search neighborhoods
+def replicable_stages(pg: PartitionedGraph) -> List[Tuple[str, int]]:
+    """The replication axis of the design-space search, enumerated:
+    ``[(anchor node name, iteration count)]`` for every replicable segment
+    of every (unreplicated) partition, in execution order.  The iteration
+    count is the largest useful replica factor — ``k`` beyond it leaves
+    replicas with no iterations (``replicate_partitions`` rejects it).
+    """
+    out: List[Tuple[str, int]] = []
+    for p in pg.partitions:
+        if p.repl_group is not None and p.repl_group != p.idx:
+            continue
+        for (anchor, iters, ok) in _stage_chain(pg, p):
+            if ok:
+                out.append((anchor, int(iters)))
+    return out
+
+
 # -------------------------------------------------------- multi-chip scale-out
 def cut_bytes(pg: PartitionedGraph, boundary: int) -> int:
     """Bytes of every partition edge crossing the cut before ``boundary``
@@ -444,8 +462,81 @@ def cut_bytes(pg: PartitionedGraph, boundary: int) -> int:
     return total
 
 
-def partition_chips(pg: PartitionedGraph, mesh: ChipMesh) -> Dict[int, int]:
+def chip_cuts_of(assign: Dict[int, int], n_chips: int) -> Tuple[int, ...]:
+    """The boundary tuple of a contiguous chip assignment: entry ``c`` is
+    the number of partitions placed on chips ``[0, c]`` — the inverse of
+    ``partition_chips(..., cuts=)``, used by the autotuner to turn the DP's
+    pick into an explicit, perturbable starting point."""
+    counts = [0] * n_chips
+    for p, c in assign.items():
+        counts[c] += 1
+    bounds = []
+    acc = 0
+    for c in range(n_chips - 1):
+        acc += counts[c]
+        bounds.append(acc)
+    return tuple(bounds)
+
+
+def cut_neighbors(cuts: Sequence[int], n_parts: int
+                  ) -> Iterator[Tuple[int, ...]]:
+    """The cut-point neighborhood of the design-space search: every tuple
+    reachable by moving one boundary one partition left or right, kept
+    non-decreasing within ``[0, n_parts]``.  Capacity and link feasibility
+    are *not* checked here — ``partition_chips(..., cuts=)`` validates
+    exactly, and an infeasible neighbor is discarded for free by the
+    search's compile pre-filter."""
+    cuts = tuple(int(c) for c in cuts)
+    for i in range(len(cuts)):
+        for d in (-1, 1):
+            c = cuts[i] + d
+            lo = cuts[i - 1] if i > 0 else 0
+            hi = cuts[i + 1] if i + 1 < len(cuts) else n_parts
+            if lo <= c <= hi:
+                yield cuts[:i] + (c,) + cuts[i + 1:]
+
+
+def _assign_from_cuts(pg: PartitionedGraph, mesh: ChipMesh,
+                      cuts: Sequence[int], fwd_edges) -> Dict[int, int]:
+    """Explicit-cut mode: validate ``cuts`` exactly (shape, monotonicity,
+    capacity, link feasibility) and return the assignment, raising
+    :class:`PartitionError` naming the violated property."""
+    n_parts = len(pg.partitions)
+    cap = mesh.chip.n_cores
+    cuts = tuple(int(c) for c in cuts)
+    if len(cuts) != mesh.n_chips - 1:
+        raise PartitionError(
+            f"chip cuts {cuts} need {mesh.n_chips - 1} boundaries for "
+            f"{mesh.n_chips} chips, got {len(cuts)}")
+    bounds = [0, *cuts, n_parts]
+    for lo, hi in zip(bounds, bounds[1:]):
+        if hi < lo or lo < 0 or hi > n_parts:
+            raise PartitionError(
+                f"chip cuts {cuts} are not non-decreasing in [0, {n_parts}]")
+        if hi - lo > cap:
+            raise PartitionError(
+                f"chip cuts {cuts} put {hi - lo} partitions on one chip "
+                f"(capacity {cap})")
+    assign = {}
+    for chip_idx, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        for p in range(lo, hi):
+            assign[p] = chip_idx
+    if not _links_ok(fwd_edges, assign, mesh):
+        raise PartitionError(
+            f"chip cuts {cuts} stretch a partition edge over a missing "
+            f"mesh link (links: {sorted(mesh.links)})")
+    return assign
+
+
+def partition_chips(pg: PartitionedGraph, mesh: ChipMesh,
+                    cuts: Optional[Sequence[int]] = None) -> Dict[int, int]:
     """Split the partition chain across the mesh's chips: partition -> chip.
+
+    ``cuts`` overrides the byte-minimizing DP with explicit boundaries
+    (``len == n_chips - 1``, non-decreasing partition indices) — the
+    autotuner's cut-point search axis.  Explicit cuts are validated exactly
+    (capacity + link feasibility) and raise :class:`PartitionError` when
+    infeasible instead of falling back.
 
     Contract (the chip-level pass the per-chip mapper builds on):
       * assignments are *contiguous* in partition order — every partition
@@ -473,6 +564,8 @@ def partition_chips(pg: PartitionedGraph, mesh: ChipMesh) -> Dict[int, int]:
         raise PartitionError(
             f"{n_parts} partitions > {n_chips} chips x {cap} cores")
     fwd_edges = [(s, d) for (s, d) in pg.edges if s != GCU_PARTITION]
+    if cuts is not None:
+        return _assign_from_cuts(pg, mesh, cuts, fwd_edges)
     max_span = max(1, mesh.max_edge_span())
 
     bcost = [cut_bytes(pg, i) for i in range(n_parts + 1)]

@@ -6,7 +6,8 @@ imports it at module level); submodules therefore defer any
 ``repro.core`` imports into function bodies.
 """
 
-from .critical import CriticalPath, critical_path, static_bottleneck
+from .critical import (CriticalPath, critical_path, propose_moves,
+                       static_bottleneck)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .stalls import (CATEGORIES, DEAD, DEP_WAIT, DPU_BUSY, DRAINED, FAILED,
                      GCU_STARVED, INFLIGHT_BOUND, LINK_DELAY, StallBreakdown,
@@ -19,5 +20,5 @@ __all__ = [
     "Counter", "CriticalPath", "Gauge", "Histogram", "MetricsRegistry",
     "StallBreakdown", "TraceRecorder",
     "classify_unassigned", "critical_path", "dep_key", "in_flight",
-    "static_bottleneck",
+    "propose_moves", "static_bottleneck",
 ]

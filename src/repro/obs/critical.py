@@ -74,6 +74,34 @@ def critical_path(stats: Any) -> CriticalPath:
                         cycles=sb.cycles, ranking=cands)
 
 
+def propose_moves(cp: CriticalPath, max_moves: int = 3
+                  ) -> List[Tuple[str, str]]:
+    """Ranked move targets for a design-space search: up to ``max_moves``
+    distinct ``(kind, name)`` pairs from the occupancy ranking, most-binding
+    first.  This is the dynamic counterpart of attacking
+    ``static_bottleneck``'s pick — a tuner replicates a named ``stage``
+    (the name is the stage anchor, usable directly as a
+    ``replicate={anchor: k}`` key), re-cuts or re-links around a named
+    ``link``, and treats ``gcu`` as the signal that the input stream — not
+    any stage — binds, so replication moves are wasted there.  Tenant
+    prefixes (``t<k>:``) are stripped so stage names match graph node
+    names.  Zero-busy resources are never proposed."""
+    out: List[Tuple[str, str]] = []
+    seen = set()
+    for kind, name, busy in cp.ranking:
+        if busy <= 0:
+            break  # ranking is busy-descending: nothing left to attack
+        if kind == "stage" and ":" in name:
+            name = name.split(":", 1)[1]
+        if (kind, name) in seen:
+            continue
+        seen.add((kind, name))
+        out.append((kind, name))
+        if len(out) >= max_moves:
+            break
+    return out
+
+
 def static_bottleneck(pg: Any,
                       dma_pixels_per_cycle: Optional[int] = None) -> str:
     """``plan_replication``'s view of the same question: which stage's

@@ -1,0 +1,228 @@
+"""Design-space autotuner (ISSUE 10): determinism, funnel accounting,
+committed-artifact round-trips, and the search-neighborhood primitives.
+
+The determinism tests are the contract the CI ``autotune-smoke`` job
+rests on: same (model, target, workload, budget, seed, space) must give a
+bitwise-identical ``TuneResult`` — which also means the committed
+``configs/tuned/*.json`` artifacts must reproduce on *either* polyhedral
+backend, so nothing backend- or wall-clock-shaped may leak into them.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.analysis import verify_program
+from repro.core import (PartitionError, Simulator, build_lenet_like,
+                        build_resnet_block_chain, chip_cuts_of,
+                        compile_model, cut_neighbors, make_chip, make_mesh,
+                        partition_chips, partition_graph, replicable_stages)
+from repro.tune import (SearchSpace, TRIAL_STAGES, TuneConfig, TuneResult,
+                        TuneWorkload, ZOO, artifact_json, autotune,
+                        load_tuned, resolve_tuned, tune_zoo_entry)
+
+CHIP = dict(topology="all_to_all", dma_pixels_per_cycle=16)
+
+
+def _small_search(seed=0, budget=8):
+    return autotune(
+        build_lenet_like(), make_chip(18, **CHIP),
+        TuneWorkload(n_images=3), budget=budget, seed=seed,
+        space=SearchSpace(max_repl_k=16, batch=4, shortlist=2),
+        label="lenet")
+
+
+# ------------------------------------------------------------- determinism
+def test_same_seed_bitwise_identical():
+    a, b = _small_search(seed=7), _small_search(seed=7)
+    assert a.to_json() == b.to_json()          # bytes, not just scores
+    assert a.best == b.best and a.best_cycles == b.best_cycles
+
+
+def test_different_seed_still_valid():
+    # different seeds may walk differently but both must satisfy the
+    # result invariants and agree with a re-simulation of their winner
+    r = _small_search(seed=11)
+    assert r.best_cycles <= r.baseline_cycles
+    assert any(t.stage == "simulated" for t in r.trials)
+
+
+def test_no_wallclock_or_backend_in_result_json():
+    d = json.loads(_small_search().to_json())
+    dumped = json.dumps(d)
+    for forbidden in ("_ms", "wall", "time", "islpy", "fisl", "backend"):
+        assert forbidden not in dumped, forbidden
+
+
+# ------------------------------------------------------ funnel accounting
+def test_funnel_accounting():
+    r = _small_search(budget=10)
+    counts = r.counts
+    assert counts["candidates"] == len(r.trials) <= 10
+    assert counts["candidates"] == sum(counts[s] for s in TRIAL_STAGES)
+    for t in r.trials:
+        assert t.stage in TRIAL_STAGES
+        if t.stage == "simulated":
+            # only simulated trials carry a score (and a bottleneck tag)
+            assert t.cycles is not None and t.cycles > 0
+            assert t.detail.startswith("bottleneck=")
+        else:
+            assert t.cycles is None            # never touched the engine
+        if t.stage in ("compile-error", "prefilter-discard"):
+            assert t.static_interval is None   # discarded before ranking
+            assert t.detail                    # discard reason is named
+    # trial indices are the consideration order, dense from 0
+    assert [t.index for t in r.trials] == list(range(len(r.trials)))
+
+
+def test_prefilter_discards_are_never_simulated(monkeypatch):
+    # inject a pre-filter rule that rejects every candidate wider than the
+    # unreplicated base program (>3 cores on lenet), then assert the
+    # funnel honored it: discarded configs never reached the engine
+    from repro.analysis.diagnostics import AnalysisDiagnostic
+    from repro.tune import search as search_mod
+    real = search_mod.prefilter_program
+
+    def narrow_only(prog, chip=None, *, max_inflight=1):
+        report = real(prog, chip, max_inflight=max_inflight)
+        if len(prog.cores) > 3:
+            report.diagnostics.insert(0, AnalysisDiagnostic(
+                check="test-width", severity="error",
+                message=f"rejected: {len(prog.cores)} cores"))
+        return report
+
+    monkeypatch.setattr(search_mod, "prefilter_program", narrow_only)
+    r = _small_search(budget=8)
+    assert r.counts["prefilter-discard"] >= 1
+    for t in r.trials:
+        if t.stage == "prefilter-discard":
+            assert t.cycles is None
+            assert "test-width" in t.detail
+        if t.stage == "simulated":
+            assert t.n_cores is not None and t.n_cores <= 3
+    assert r.best.key() == "base"     # only the base config survived
+
+
+def test_infeasible_space_raises():
+    # an SRAM-starved chip rejects even the base config at mapping time:
+    # the search must fail loudly, not return a fabricated result
+    chip = make_chip(18, sram_bytes=64, **CHIP)
+    with pytest.raises(PartitionError, match="no candidate"):
+        autotune(build_lenet_like(), chip, TuneWorkload(n_images=2),
+                 budget=4, seed=0, space=SearchSpace(batch=2, shortlist=1))
+
+
+def test_budget_is_a_hard_cap():
+    r = _small_search(budget=5)
+    assert len(r.trials) <= 5
+    with pytest.raises(ValueError, match="budget"):
+        _small_search(budget=1)
+
+
+# ------------------------------------------- committed-artifact round-trip
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_tuned_artifact_round_trip(name):
+    """configs/tuned/<name>.json → compile_model(tune=) → verify_program
+    clean → simulated cycles == the recorded score, on whichever
+    polyhedral backend this leg runs."""
+    art = load_tuned(name)
+    entry = ZOO[name]
+    graph, chip = entry.build(), entry.chip()
+    prog = compile_model(graph, chip, tune=name)
+    report = verify_program(prog, chip)
+    assert not report.errors(), [d.message for d in report.errors()]
+    rng = np.random.default_rng(entry.workload.seed)
+    shape = tuple(int(x) for x in graph.values[graph.inputs[0]].shape)
+    images = [rng.normal(size=shape).astype(np.float32)
+              for _ in range(entry.workload.n_images)]
+    _, stats = Simulator(prog, chip, check_raw=False).run(
+        images, schedule=entry.workload.schedule)
+    assert stats.cycles == art["cycles"]
+    assert art["cycles"] <= art["baseline"]["cycles"]
+
+
+def test_resolve_tuned_forms():
+    cfg = TuneConfig(replicate=(("conv1", 2),))
+    assert resolve_tuned(cfg) is cfg
+    art = load_tuned("lenet")
+    assert resolve_tuned(art) == resolve_tuned("lenet")
+    # artifact path form
+    p = pathlib.Path(__file__).resolve().parents[1] / "configs" / "tuned" \
+        / "lenet.json"
+    assert resolve_tuned(p) == resolve_tuned("lenet")
+    with pytest.raises(FileNotFoundError, match="committed configs"):
+        load_tuned("no-such-model")
+
+
+def test_tune_config_json_round_trip():
+    cfg = TuneConfig(replicate=(("a", 3), ("b", 2)), chips=2,
+                     topology="ring", chip_cuts=(3, 8),
+                     tenant_order=(1, 0))
+    assert TuneConfig.from_json_dict(cfg.to_json_dict()) == cfg
+    assert TuneConfig.from_json_dict(json.loads(
+        json.dumps(cfg.to_json_dict()))) == cfg
+
+
+# ------------------------------------------------- neighborhood primitives
+def test_cut_neighbors_and_explicit_cuts():
+    pg = partition_graph(build_resnet_block_chain(2))
+    mesh = make_mesh(2, chip=make_chip(8, **CHIP))
+    assign = partition_chips(pg, mesh)
+    cuts = chip_cuts_of(assign, mesh.n_chips)
+    assert len(cuts) == mesh.n_chips - 1   # one boundary between 2 chips
+    # pinning the DP's own cuts must reproduce its assignment
+    assert partition_chips(pg, mesh, cuts=cuts) == assign
+    n_parts = len(pg.partitions)
+    neighbors = list(cut_neighbors(cuts, n_parts))
+    assert neighbors
+    for nb in neighbors:
+        assert nb != tuple(cuts)
+        assert all(0 <= b <= n_parts for b in nb)
+        assert list(nb) == sorted(nb)
+    with pytest.raises(PartitionError, match="cut"):
+        partition_chips(pg, mesh, cuts=(0, 1))   # wrong boundary count
+
+
+def test_replicable_stages_names_match_replicate_keys():
+    g = build_lenet_like()
+    stages = replicable_stages(partition_graph(g))
+    assert stages, "lenet must expose replicable stages"
+    anchor, iters = stages[0]
+    assert iters > 1
+    chip = make_chip(18, **CHIP)
+    prog = compile_model(g, chip, replicate={anchor: 2})
+    assert prog is not None
+
+
+def test_tune_kwarg_applies_mesh_and_plan():
+    # the resnet4 artifact records a 2-chip mesh: tune= must materialize it
+    chip = ZOO["resnet4"].chip()
+    prog = compile_model(build_resnet_block_chain(4), chip, tune="resnet4")
+    art = load_tuned("resnet4")
+    assert art["config"]["chips"] == 2
+    assert prog.mesh is not None and prog.mesh.n_chips == 2
+    # explicit arguments win over the artifact
+    prog1 = compile_model(build_resnet_block_chain(4), chip,
+                          tune=TuneConfig())
+    assert prog1.mesh is None
+
+
+def test_artifact_json_is_canonical():
+    # regenerating the artifact bytes from the recorded search must match
+    # the committed file exactly (the CI autotune-smoke gate, in-process);
+    # run the cheaper lenet recipe only — resnet4 is covered nightly by CI
+    result = tune_zoo_entry("lenet")
+    committed = (pathlib.Path(__file__).resolve().parents[1] / "configs"
+                 / "tuned" / "lenet.json").read_text()
+    assert artifact_json(result) == committed
+
+
+def test_result_json_parses_and_counts_match():
+    r = _small_search()
+    d = json.loads(r.to_json())
+    assert d["counts"] == r.counts
+    assert d["best_cycles"] == r.best_cycles
+    assert len(d["trials"]) == len(r.trials)
+    assert isinstance(r, TuneResult)
