@@ -100,7 +100,13 @@ def artifact_dict(result: TuneResult) -> Dict[str, Any]:
     artifact instead) — the committed file carries only what loading and
     reproducing need, so review diffs stay small.
     """
-    entry = ZOO[result.label]
+    entry = ZOO.get(result.label)
+    if entry is None:
+        raise ValueError(
+            f"cannot build a committed artifact for label "
+            f"{result.label!r}: artifacts name the (model, chip) pair by "
+            f"zoo entry, so the result must come from a search labelled "
+            f"with one of {sorted(ZOO)} (see tune_zoo_entry)")
     return {
         "format": ARTIFACT_FORMAT,
         "model": result.label,
@@ -155,12 +161,15 @@ def load_tuned(name_or_path: Union[str, pathlib.Path]) -> Dict[str, Any]:
     return d
 
 
-def resolve_tuned(tune: Union[str, pathlib.Path, TuneConfig, Dict[str, Any]]
-                  ) -> TuneConfig:
+def resolve_tuned(tune: Union[str, pathlib.Path, TuneConfig, TuneResult,
+                              Dict[str, Any]]) -> TuneConfig:
     """What ``compile_model(tune=...)`` accepts: a zoo/artifact name or
-    path, an artifact dict, or an already-built :class:`TuneConfig`."""
+    path, an artifact dict, a :class:`TuneResult` (its winning config),
+    or an already-built :class:`TuneConfig`."""
     if isinstance(tune, TuneConfig):
         return tune
+    if isinstance(tune, TuneResult):
+        return tune.best
     if isinstance(tune, dict):
         d = tune
     else:

@@ -210,13 +210,22 @@ class _Evaluator:
         return None, interval
 
     # ----------------------------------------------------------- simulate
-    def simulate(self, progs: Sequence[AcceleratorProgram]) -> _SimOutcome:
+    def simulate(self, progs: Sequence[AcceleratorProgram],
+                 tenant_order: Optional[Tuple[int, ...]] = None
+                 ) -> _SimOutcome:
         self.sim_calls += 1
         target: Any = progs[0] if len(progs) == 1 else list(progs)
+        tenants = self.tenants
+        if tenants is not None and tenant_order is not None:
+            # compile() permuted the program list into cfg.tenant_order;
+            # self.tenants holds original graph indices, so remap each
+            # image to its graph's slot in the permuted list
+            slot = {t: j for j, t in enumerate(tenant_order)}
+            tenants = [slot[t] for t in tenants]
         sim = Simulator(target, self.chip, check_raw=False, engine="event",
                         compute_plane="numpy")
         _, stats = sim.run(self.images, schedule=self.workload.schedule,
-                           tenants=self.tenants, stalls=True)
+                           tenants=tenants, stalls=True)
         n_cores = sum(len(p.cores) for p in progs)
         return _SimOutcome(cycles=int(stats.cycles), n_cores=n_cores,
                            crit=critical_path(stats))
@@ -497,7 +506,7 @@ def autotune(model: Union[Graph, Sequence[Graph]],
                 trials.append(Trial(idx, cfg, prov, "ranked-out",
                                     interval, None, None))
                 continue
-            outcome = ev.simulate(progs)
+            outcome = ev.simulate(progs, cfg.tenant_order)
             trials.append(Trial(idx, cfg, prov, "simulated", interval,
                                 outcome.cycles, outcome.n_cores,
                                 detail=f"bottleneck={outcome.crit.kind}:"
@@ -558,8 +567,8 @@ def autotune(model: Union[Graph, Sequence[Graph]],
             batch.append((m, prov))
         if not batch:
             break  # neighborhood exhausted
-        rounds += 1
         consider(batch)
+        rounds += 1
 
     if best is None:
         raise PartitionError(

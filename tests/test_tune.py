@@ -18,10 +18,11 @@ from repro.analysis import verify_program
 from repro.core import (PartitionError, Simulator, build_lenet_like,
                         build_resnet_block_chain, chip_cuts_of,
                         compile_model, cut_neighbors, make_chip, make_mesh,
-                        partition_chips, partition_graph, replicable_stages)
+                        partition_chips, partition_graph, place_tenants,
+                        replicable_stages)
 from repro.tune import (SearchSpace, TRIAL_STAGES, TuneConfig, TuneResult,
-                        TuneWorkload, ZOO, artifact_json, autotune,
-                        load_tuned, resolve_tuned, tune_zoo_entry)
+                        TuneWorkload, ZOO, artifact_dict, artifact_json,
+                        autotune, load_tuned, resolve_tuned, tune_zoo_entry)
 
 CHIP = dict(topology="all_to_all", dma_pixels_per_cycle=16)
 
@@ -105,6 +106,52 @@ def test_prefilter_discards_are_never_simulated(monkeypatch):
     assert r.best.key() == "base"     # only the base config survived
 
 
+def test_multi_tenant_tenant_order_moves_score_correctly():
+    """Tenant-order moves permute the compiled program list; the
+    evaluator must remap its per-image tenant indices to the permuted
+    slots.  The tenants are differently shaped on purpose: a stale index
+    would feed lenet images to the resnet program and crash on reshape
+    (or, shapes permitting, silently score the wrong model)."""
+    graphs = [build_lenet_like(), build_resnet_block_chain(2)]
+    chip = make_chip(12, **CHIP)
+    workload = TuneWorkload(n_images=2)
+    r = autotune(graphs, chip, workload, budget=4, seed=0,
+                 space=SearchSpace(batch=2, shortlist=2))
+    swapped = [t for t in r.trials
+               if t.config.tenant_order == (1, 0)
+               and t.stage == "simulated"]
+    assert swapped, "the tenant-swap move must be simulated, not crash"
+    # pin the score: rebuild the swapped placement directly and simulate
+    # the same seeded images against their slots in the *permuted* list
+    placement = place_tenants([graphs[1], graphs[0]], chip)
+    rng = np.random.default_rng(workload.seed)
+    per_graph = [
+        [rng.normal(size=tuple(int(x) for x in
+                               g.values[g.inputs[0]].shape)
+                    ).astype(np.float32)
+         for _ in range(workload.n_images)]
+        for g in graphs]
+    images, tenants = [], []
+    for i in range(workload.n_images):
+        for t, imgs in enumerate(per_graph):
+            images.append(imgs[i])
+            tenants.append({1: 0, 0: 1}[t])   # graph idx -> slot in (1, 0)
+    sim = Simulator(list(placement.programs), chip, check_raw=False,
+                    engine="event", compute_plane="numpy")
+    _, stats = sim.run(images, schedule=workload.schedule, tenants=tenants,
+                       stalls=True)
+    assert int(stats.cycles) == swapped[0].cycles
+
+
+def test_multi_tenant_same_seed_bitwise_identical():
+    graphs = [build_lenet_like(), build_resnet_block_chain(2)]
+    chip = make_chip(12, **CHIP)
+    runs = [autotune(graphs, chip, TuneWorkload(n_images=2), budget=4,
+                     seed=3, space=SearchSpace(batch=2, shortlist=2))
+            for _ in range(2)]
+    assert runs[0].to_json() == runs[1].to_json()
+
+
 def test_infeasible_space_raises():
     # an SRAM-starved chip rejects even the base config at mapping time:
     # the search must fail loudly, not return a fabricated result
@@ -143,9 +190,19 @@ def test_tuned_artifact_round_trip(name):
     assert art["cycles"] <= art["baseline"]["cycles"]
 
 
+def _dummy_result(label="custom", cfg=None):
+    cfg = cfg or TuneConfig(replicate=(("conv1", 2),))
+    return TuneResult(label=label, seed=0, budget=2, space=SearchSpace(),
+                      workload=TuneWorkload(), best=cfg, best_cycles=100,
+                      baseline=cfg, baseline_cycles=100, trials=[])
+
+
 def test_resolve_tuned_forms():
     cfg = TuneConfig(replicate=(("conv1", 2),))
     assert resolve_tuned(cfg) is cfg
+    # a TuneResult resolves to its winning config (the compile_model
+    # docstring promises this form)
+    assert resolve_tuned(_dummy_result(cfg=cfg)) is cfg
     art = load_tuned("lenet")
     assert resolve_tuned(art) == resolve_tuned("lenet")
     # artifact path form
@@ -154,6 +211,13 @@ def test_resolve_tuned_forms():
     assert resolve_tuned(p) == resolve_tuned("lenet")
     with pytest.raises(FileNotFoundError, match="committed configs"):
         load_tuned("no-such-model")
+
+
+def test_artifact_rejects_non_zoo_label():
+    # autotune's default label is "model" — artifact_dict must explain
+    # that artifacts only name zoo entries, not die on a bare KeyError
+    with pytest.raises(ValueError, match="zoo"):
+        artifact_dict(_dummy_result(label="model"))
 
 
 def test_tune_config_json_round_trip():
